@@ -1,0 +1,11 @@
+"""Real-JAX lane-executor policy benchmark (ours): STP/ANTT/fairness with
+actual measured JAX step computations.  Populated once repro.core.executor
+lands; skips gracefully before that."""
+
+
+def run():
+    try:
+        from .executor_impl import run_impl
+    except ImportError:
+        return [("executor.status", "SKIPPED (executor benchmark not built yet)")]
+    return run_impl()

@@ -1,0 +1,32 @@
+"""Figure 1: STP under SJF / FIFO / LJF for the 28 alphabetical-order
+two-program workloads — FIFO's performance is an artefact of arrival order.
+
+Paper values (geomean STP): SJF 1.82, FIFO 1.58, LJF 1.16; FIFO matches SJF
+for 17/28 workloads and LJF for 8/28.
+"""
+
+from repro.core import geomean
+from repro.core.workload import two_program_workloads
+
+from .common import workload_metrics
+
+
+def run():
+    workloads = two_program_workloads(both_orders=False)  # alphabetical A+B
+    stp = {"sjf": [], "fifo": [], "ljf": []}
+    agree_sjf = agree_ljf = neutral = 0
+    for _, wl in workloads:
+        ms = {p: workload_metrics(p, wl) for p in stp}
+        for p in stp:
+            stp[p].append(ms[p].stp)
+        ds, dl = abs(ms["fifo"].stp - ms["sjf"].stp), abs(ms["fifo"].stp - ms["ljf"].stp)
+        if abs(ms["sjf"].stp - ms["ljf"].stp) < 0.02:
+            neutral += 1
+        elif ds <= dl:
+            agree_sjf += 1
+        else:
+            agree_ljf += 1
+    rows = [(f"fig01.stp_geomean.{p}", f"{geomean(v):.3f}") for p, v in stp.items()]
+    rows.append(("fig01.fifo_matches", f"sjf={agree_sjf};ljf={agree_ljf};neutral={neutral}"))
+    rows.append(("fig01.paper", "sjf=1.82;fifo=1.58;ljf=1.16;matches=17/8/3"))
+    return rows

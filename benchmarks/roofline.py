@@ -1,0 +1,11 @@
+"""Roofline benchmark: reads the dry-run artifacts (EXPERIMENTS §Dry-run)
+and emits the three roofline terms per (arch x shape x mesh).  Skips
+gracefully until the dry-run has produced artifacts."""
+
+
+def run():
+    try:
+        from .roofline_impl import run_impl
+    except ImportError:
+        return [("roofline.status", "SKIPPED (run launch/dryrun.py first)")]
+    return run_impl()

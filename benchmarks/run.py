@@ -1,0 +1,60 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is the wall time of
+the producing module's ``run()`` divided by the number of derived rows it
+emitted (all benchmarks are derived from simulation/lowering artifacts, not
+single-op microbenchmarks).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run [module-substring ...]
+"""
+
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig01_fifo_luck",
+    "benchmarks.fig03_staircase_trace",
+    "benchmarks.fig04_prediction_accuracy",
+    "benchmarks.fig06_block_durations",
+    "benchmarks.fig07_residency",
+    "benchmarks.fig09_corunner",
+    "benchmarks.fig11_ss_predictor",
+    "benchmarks.table5_policies",
+    "benchmarks.fig14_15_16_per_workload",
+    "benchmarks.table6_arrival_offsets",
+    "benchmarks.executor_policies",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if filters and not any(f in modname for f in filters):
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            t0 = time.perf_counter()
+            rows = mod.run()
+            dt_us = (time.perf_counter() - t0) * 1e6
+            per = dt_us / max(1, len(rows))
+            for name, derived in rows:
+                print(f"{name},{per:.0f},\"{derived}\"")
+        except Exception:
+            failures += 1
+            print(f"{modname},0,\"ERROR\"", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Concurrent serving under preemptive SRTF vs FIFO — the paper's headline
+scenario on real JAX computation.
+
+A long decode job (many chunks) is already running when a short job
+arrives.  FIFO serializes the short job behind the long one; SRTF samples
+the newcomer's first chunk on one lane (structural runtime prediction),
+learns it is shorter, and hands the machine over — preempting only at
+chunk boundaries, exactly like the paper's thread-block-granular
+preemption.
+
+Run:  PYTHONPATH=src python examples/concurrent_serving.py
+"""
+
+from repro.configs import get_arch
+from repro.core.executor import LaneExecutor
+from repro.core.jobs import make_serve_job
+from repro.core.metrics import evaluate
+from repro.core.policies import make_policy
+
+LANES = 4
+
+
+def build():
+    return [
+        make_serve_job(get_arch("minicpm3-4b").reduced(), "long-job",
+                       blocks=40, tokens_per_block=16, batch=2,
+                       prompt_len=16, max_residency=LANES, seed=0),
+        make_serve_job(get_arch("yi-6b").reduced(), "short-job",
+                       blocks=5, tokens_per_block=16, batch=2,
+                       prompt_len=16, max_residency=LANES,
+                       arrival=0.01, seed=1),
+    ]
+
+
+def solo_runtimes():
+    out = {}
+    for job in build():
+        res = LaneExecutor([job], make_policy("fifo"), n_lanes=LANES).run()
+        out[job.name] = next(iter(res.values())).turnaround
+    return out
+
+
+def main():
+    solo = solo_runtimes()
+    print(f"solo runtimes: " +
+          ", ".join(f"{k}={v:.2f}s" for k, v in solo.items()))
+    for policy in ("fifo", "srtf", "srtf-adaptive"):
+        ex = LaneExecutor(build(), make_policy(policy), n_lanes=LANES)
+        ex.oracle_runtimes.update(solo)
+        results = ex.run()
+        ta = {k: r.turnaround for k, r in results.items()}
+        m = evaluate(ta, {k: solo[k.rsplit("#", 1)[0]] for k in ta})
+        detail = ", ".join(f"{k}={v:.2f}s" for k, v in sorted(ta.items()))
+        print(f"{policy:14s} STP={m.stp:.2f} ANTT={m.antt:.2f} "
+              f"fairness={m.fairness:.2f}   [{detail}]")
+    print("\nExpected: SRTF rescues the short job's turnaround at a tiny "
+          "cost to the long job (paper Fig. 12 / Table 5).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: the paper's idea in 60 seconds.
+
+1. Build a reduced model from the zoo and train it for a few steps.
+2. Profile ONE step and predict the whole job's runtime with the Staircase
+   model (Eq. 1) — structural runtime prediction.
+3. Compare the prediction against the actual runtime.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--arch yi-6b]
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, get_arch
+from repro.core.predictor import staircase_runtime
+from repro.data import pipeline as data
+from repro.configs.shapes import InputShape
+from repro.launch.steps import build_train_step
+from repro.models import lm
+from repro.optim import adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    shape = InputShape("quickstart", seq_len=64, global_batch=4, kind="train")
+    bundle = build_train_step(cfg, shape, mesh=None, remat=False,
+                              opt_cfg=adamw.OptConfig(lr=1e-3,
+                                                      warmup_steps=2,
+                                                      total_steps=args.steps))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+
+    print(f"arch={args.arch} (reduced: {sum(x.size for x in jax.tree.leaves(params)) / 1e6:.1f}M params)")
+    t_job0 = time.perf_counter()
+    predicted = None
+    for step in range(args.steps):
+        batch = data.batch_for_step(cfg, shape, step)
+        t0 = time.perf_counter()
+        params, opt, metrics = bundle.fn(params, opt, batch)
+        jax.block_until_ready(metrics["nll"])
+        dt = time.perf_counter() - t0
+        if step == 1:   # steady-state sample: one "thread block"
+            predicted = staircase_runtime(args.steps - 1, 1, dt)
+            print(f"[staircase] t={dt * 1e3:.1f} ms/step -> predicted "
+                  f"{predicted:.2f}s for the remaining {args.steps - 1} steps")
+        print(f"step {step}: nll={float(metrics['nll']):.4f} ({dt * 1e3:.0f} ms)")
+    actual = time.perf_counter() - t_job0
+    if predicted:
+        # compare against the steady-state portion (exclude step 0 = compile)
+        print(f"[staircase] total wall {actual:.2f}s (step 0 is JIT "
+              f"compile); prediction for the sampled portion was "
+              f"{predicted:.2f}s — see benchmarks/fig04 for the calibrated "
+              "accuracy study")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .base import (ArchConfig, EncoderConfig, MLAConfig, MoEConfig,
+                   RGLRUConfig, SSMConfig)
+from .registry import ARCHS, get_arch
+from .shapes import SHAPES, InputShape, shapes_for

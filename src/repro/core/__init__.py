@@ -1,0 +1,70 @@
+"""The paper's primary contribution: structural runtime prediction and
+preemptive thread-block-style scheduling for concurrent workloads.
+
+Backend-independent core:
+
+* :mod:`repro.core.predictor` — Staircase model (Eq. 1) + Simple Slicing
+  online predictor (Table 1 / Algorithm 1 / Eq. 2).
+* :mod:`repro.core.policies`  — FIFO, SJF, LJF, JIT-MPMax, SRTF,
+  SRTF/Adaptive.
+* :mod:`repro.core.simulator` — discrete-event multi-SM GPU simulator
+  (the GPGPU-Sim analogue used to reproduce the paper's evaluation).
+* :mod:`repro.core.executor`  — real-JAX lane executor: the same scheduler
+  driving actual ``train_step`` / ``serve_step`` computations (TPU pod
+  adaptation; see DESIGN.md Section 2).
+* :mod:`repro.core.metrics`   — STP / ANTT / StrictF.
+"""
+
+from .metrics import WorkloadMetrics, evaluate, geomean, summarize
+from .policies import (
+    FIFO,
+    LJF,
+    MPMax,
+    POLICIES,
+    SJF,
+    SRTF,
+    SRTFAdaptive,
+    make_policy,
+)
+from .predictor import (
+    SimpleSlicingPredictor,
+    staircase_blocks_in,
+    staircase_runtime,
+)
+from .simulator import Simulator, SimResult, simulate, solo_runtime
+from .workload import (
+    Arrival,
+    ERCBENCH,
+    KernelSpec,
+    N_SM,
+    TABLE3_RUNTIME,
+    two_program_workloads,
+)
+
+__all__ = [
+    "Arrival",
+    "ERCBENCH",
+    "FIFO",
+    "KernelSpec",
+    "LJF",
+    "MPMax",
+    "N_SM",
+    "POLICIES",
+    "SJF",
+    "SRTF",
+    "SRTFAdaptive",
+    "SimResult",
+    "SimpleSlicingPredictor",
+    "Simulator",
+    "TABLE3_RUNTIME",
+    "WorkloadMetrics",
+    "evaluate",
+    "geomean",
+    "make_policy",
+    "simulate",
+    "solo_runtime",
+    "staircase_blocks_in",
+    "staircase_runtime",
+    "summarize",
+    "two_program_workloads",
+]

@@ -1,0 +1,290 @@
+"""Real-JAX lane executor: the TPU-pod adaptation of the paper's thread
+block scheduler, driving ACTUAL jit-compiled step functions.
+
+Mapping (DESIGN.md Section 2): the machine is a pod partitioned into
+``n_lanes`` gang-scheduled mesh slices; a *job* (training run / serving
+batch) is a grid of ``num_blocks`` homogeneous *blocks* (steps); a job's
+*residency* is the number of lanes it currently occupies.  Each lane runs
+one block at a time, so the executor is the paper's machine with SMs=lanes.
+
+Time model: lanes advance on a virtual clock ordered by *measured* wall
+time of each real step execution (this container has one physical device,
+so lane parallelism is virtual while every block's duration is a real
+measurement — including JIT, cache and memory effects).  On a real pod the
+same loop runs with concurrent lanes and wall-clock time.
+
+The scheduler reuses the unmodified policy classes and Simple Slicing
+predictor from the DES: the executor duck-types the Simulator surface they
+consume.  Fault tolerance: ``fail_lane_at`` kills a lane mid-run (its block
+is lost and re-executed; the predictor starts a new slice since residency
+changed); ``straggler`` inflates one lane's durations until quarantined.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .predictor import SimpleSlicingPredictor
+from .simulator import KernelRun
+from .workload import KernelSpec
+
+
+@dataclass
+class ExecutorJob:
+    """One schedulable job: ``make_block_fn(residency)`` returns a callable
+    executing one block (one real jitted step) at that residency.
+    ``warmup_fn`` AOT-compiles the job's step functions without mutating its
+    state — the executor invokes it before scheduling so that measured block
+    durations (and hence the predictor's sampled ``t``) reflect steady-state
+    compute, not one-time JIT cost, as on a production system."""
+
+    name: str
+    num_blocks: int
+    max_residency: int
+    make_block_fn: Callable[[int], Callable[[], None]]
+    arrival: float = 0.0
+    est_block_seconds: float = 1.0   # only used by SJF's fallback oracle
+    warmup_fn: Optional[Callable[[], None]] = None
+
+    def grid_spec(self) -> KernelSpec:
+        # Reuse KernelSpec so the unmodified policies see the paper's fields.
+        return KernelSpec(
+            name=self.name, num_blocks=self.num_blocks,
+            max_residency=self.max_residency, threads_per_block=1,
+            mean_t=self.est_block_seconds, rsd=0.0)
+
+
+class _LaneState:
+    __slots__ = ("index", "busy", "resident", "failed", "slow_factor")
+
+    def __init__(self, index: int):
+        self.index = index
+        self.busy: Optional[str] = None       # job key currently running
+        self.resident: Dict[int, str] = {}
+        self.failed = False
+        self.slow_factor = 1.0
+
+    def fits(self, spec) -> bool:
+        return self.busy is None and not self.failed
+
+
+@dataclass
+class JobResult:
+    key: str
+    arrival: float
+    finish: float
+    blocks: int
+    failures_absorbed: int = 0
+
+    @property
+    def turnaround(self) -> float:
+        return self.finish - self.arrival
+
+
+class LaneExecutor:
+    """Duck-typed 'sim' for the policy classes, executing real steps."""
+
+    def __init__(self, jobs: Sequence[ExecutorJob], policy, n_lanes: int = 4,
+                 fail_lane_at: Optional[Tuple[int, float]] = None,
+                 straggler: Optional[Tuple[int, float]] = None,
+                 straggler_quarantine: float = 2.5):
+        self.n_lanes = n_lanes
+        self.policy = policy
+        self.now = 0.0
+        self.predictor = SimpleSlicingPredictor(n_lanes)
+        self.sms = [_LaneState(i) for i in range(n_lanes)]
+        self.runs: Dict[str, KernelRun] = {}
+        self.jobs: Dict[str, ExecutorJob] = {}
+        self._block_fns: Dict[Tuple[str, int], Callable] = {}
+        self.oracle_runtimes: Dict[str, float] = {}
+        self.fail_lane_at = fail_lane_at
+        self.straggler = straggler
+        self.straggler_quarantine = straggler_quarantine
+        self.failures_absorbed = 0
+        self.lane_t_ewma: Dict[int, float] = {}
+        self.results: Dict[str, JobResult] = {}
+        self.trace: List[Tuple[str, int, float, float]] = []
+
+        self._events: List[Tuple[float, int, int, tuple]] = []
+        self._seq = itertools.count()
+        self._bids = itertools.count()
+        self._dead_blocks: set = set()
+        self._lane_bid: Dict[int, int] = {}
+        for order, job in enumerate(sorted(jobs, key=lambda j: j.arrival)):
+            key = f"{job.name}#{order}"
+            self.jobs[key] = job
+            run = KernelRun(key, job.grid_spec(), job.arrival, order)
+            self.runs[key] = run
+            heapq.heappush(self._events,
+                           (job.arrival, 0, next(self._seq), ("arrival", key)))
+        if fail_lane_at is not None:
+            lane, t = fail_lane_at
+            heapq.heappush(self._events, (t, 0, next(self._seq),
+                                          ("fail_lane", lane)))
+        if straggler is not None:
+            self.sms[straggler[0]].slow_factor = straggler[1]
+        for job in jobs:
+            if job.warmup_fn is not None:
+                job.warmup_fn()
+        policy.bind(self)
+
+    # ------------------------------------------------- Simulator interface
+    def active_keys(self) -> List[str]:
+        return [k for k, r in sorted(self.runs.items(),
+                                     key=lambda kv: kv[1].order)
+                if r.arrival_time <= self.now + 1e-12 and not r.finished]
+
+    def can_fit(self, key: str, lane: _LaneState) -> bool:
+        run = self.runs[key]
+        if run.unissued <= 0 or lane.busy is not None or lane.failed:
+            return False
+        cap = min(run.spec.max_residency,
+                  self.policy.residency_cap(key, lane.index))
+        return self._residency(key) < cap
+
+    def elapsed(self, key: str) -> float:
+        return self.now - self.runs[key].arrival_time
+
+    def oracle_runtime(self, key: str) -> Optional[float]:
+        return self.oracle_runtimes.get(self.runs[key].spec.name)
+
+    def _sync_residency_caps(self) -> None:
+        for key in self.active_keys():
+            run = self.runs[key]
+            for lane in range(self.n_lanes):
+                cap = min(run.spec.max_residency,
+                          self.policy.residency_cap(key, lane))
+                self.predictor.on_residency_change(key, lane, cap)
+
+    def _residency(self, key: str) -> int:
+        return sum(1 for ln in self.sms if ln.busy == key)
+
+    # ------------------------------------------------------------ execution
+    def _block_fn(self, key: str, residency: int) -> Callable[[], None]:
+        job = self.jobs[key]
+        residency = max(1, residency)
+        ck = (key, residency)
+        if ck not in self._block_fns:
+            self._block_fns[ck] = job.make_block_fn(residency)
+        return self._block_fns[ck]
+
+    def run(self) -> Dict[str, JobResult]:
+        while self._events:
+            t, _, _, payload = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            kind = payload[0]
+            if kind == "arrival":
+                self._on_arrival(payload[1])
+            elif kind == "block_end":
+                bid = payload[4]
+                if bid >= 0 and bid in self._dead_blocks:
+                    continue                      # zombie event of lost block
+                self._on_block_end(*payload[1:])
+            elif kind == "fail_lane":
+                self._on_fail_lane(payload[1])
+            self._dispatch()
+        return self.results
+
+    def _on_arrival(self, key: str) -> None:
+        run = self.runs[key]
+        self.predictor.on_launch(key, run.spec.num_blocks,
+                                 run.spec.max_residency)
+        self.policy.on_arrival(key)
+        self._sync_residency_caps()
+
+    def _on_block_end(self, key: str, lane_idx: int, lost: bool,
+                      bid: int = -1) -> None:
+        lane = self.sms[lane_idx]
+        lane.busy = None
+        run = self.runs[key]
+        if lost:
+            # failed lane: block's work is discarded, re-issue it
+            run.issued -= 1
+            self.failures_absorbed += 1
+            self.predictor.reslice_all(key)
+            return
+        run.done += 1
+        self.predictor.on_block_end(key, lane_idx, 0, self.now)
+        self.policy.on_block_end(key, lane_idx)
+        if run.done >= run.spec.num_blocks:
+            run.finish_time = self.now
+            self.results[key] = JobResult(
+                key, run.arrival_time, self.now, run.done,
+                self.failures_absorbed)
+            self.predictor.on_kernel_end(key)
+            self.policy.on_kernel_end(key)
+            self._sync_residency_caps()
+
+    def _on_fail_lane(self, lane_idx: int) -> None:
+        lane = self.sms[lane_idx]
+        lane.failed = True
+        if lane.busy is not None:
+            # the in-flight block is lost: kill its completion event and
+            # schedule the loss immediately
+            key = lane.busy
+            self._dead_blocks.add(self._lane_bid.get(lane_idx, -1))
+            heapq.heappush(self._events,
+                           (self.now, 0, next(self._seq),
+                            ("block_end", key, lane_idx, True, -1)))
+        # residency of every running job may have changed
+        for key in self.active_keys():
+            self.predictor.reslice_all(key)
+        self._sync_residency_caps()
+
+    def _dispatch(self) -> None:
+        progressed = True
+        while progressed:
+            progressed = False
+            for lane in self.sms:
+                if lane.busy is not None or lane.failed:
+                    continue
+                key = self.policy.pick(lane.index)
+                if key is None or not self.can_fit(key, lane):
+                    continue
+                self._start_block(key, lane)
+                progressed = True
+
+    def _start_block(self, key: str, lane: _LaneState) -> None:
+        run = self.runs[key]
+        residency = self._residency(key) + 1
+        fn = self._block_fn(key, residency)
+        t0 = time.perf_counter()
+        fn()                                        # REAL computation
+        dur = (time.perf_counter() - t0) * lane.slow_factor
+        lane.busy = key
+        run.issued += 1
+        self.predictor.on_block_start(key, lane.index, 0, self.now)
+        self.trace.append((key, lane.index, self.now, self.now + dur))
+        # straggler mitigation: quarantine lanes whose EWMA step time
+        # exceeds the cross-lane median by the threshold factor
+        ew = self.lane_t_ewma.get(lane.index, dur)
+        self.lane_t_ewma[lane.index] = 0.7 * ew + 0.3 * dur
+        self._maybe_quarantine()
+        bid = next(self._bids)
+        self._lane_bid[lane.index] = bid
+        heapq.heappush(self._events,
+                       (self.now + dur, 1, next(self._seq),
+                        ("block_end", key, lane.index, False, bid)))
+
+    def _maybe_quarantine(self) -> None:
+        if len(self.lane_t_ewma) < max(3, self.n_lanes):
+            return
+        vals = sorted(self.lane_t_ewma.values())
+        med = vals[len(vals) // 2]
+        for idx, ew in list(self.lane_t_ewma.items()):
+            lane = self.sms[idx]
+            if (not lane.failed and med > 0
+                    and ew > self.straggler_quarantine * med):
+                lane.failed = True   # quarantined == removed from service
+
+
+def solo_runtime_executor(job: ExecutorJob, policy_factory,
+                          n_lanes: int = 4) -> float:
+    ex = LaneExecutor([job], policy_factory(), n_lanes=n_lanes)
+    res = ex.run()
+    return next(iter(res.values())).turnaround

@@ -1,0 +1,153 @@
+"""Job builders for the real-JAX lane executor: wrap the model zoo's train
+and serve steps as schedulable grids of blocks.
+
+A training job's block is one fixed-size microbatch optimizer step; a
+serving job's block is one k-token decode chunk for a request batch.  Both
+are homogeneous, which is exactly the structural property the paper's
+predictor exploits.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.optim import adamw
+
+from .executor import ExecutorJob
+
+
+def make_train_job(
+    cfg: ArchConfig,
+    name: str,
+    *,
+    blocks: int,
+    batch: int = 4,
+    seq: int = 64,
+    max_residency: int = 4,
+    arrival: float = 0.0,
+    seed: int = 0,
+    opt_cfg: adamw.OptConfig = adamw.OptConfig(lr=1e-3, warmup_steps=5,
+                                               total_steps=1000),
+    checkpointer: Optional[Checkpointer] = None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
+) -> ExecutorJob:
+    """A training job: ``blocks`` microbatch steps of a reduced model.
+
+    Blocks mutate the job's (params, opt_state) held in a closure; because
+    preemption happens only at block boundaries, the state is always
+    consistent — checkpoint (if configured) and hand-off need no extra
+    coordination.
+    """
+    key = jax.random.PRNGKey(seed)
+    state = {"params": lm.init(cfg, key),
+             "opt": None, "block": 0}
+    state["opt"] = adamw.init(state["params"])
+    if resume and checkpointer is not None and checkpointer.latest_step() is not None:
+        step, restored, _ = checkpointer.restore(
+            {"params": state["params"], "opt": state["opt"]})
+        state["params"], state["opt"] = restored["params"], restored["opt"]
+        state["block"] = step
+
+    @jax.jit
+    def train_step(params, opt_state, tokens):
+        def loss(p):
+            return lm.loss_fn(cfg, p, {"tokens": tokens})[0]
+        l, grads = jax.value_and_grad(loss)(params)
+        new_p, new_s, _ = adamw.update(grads, opt_state, params, opt_cfg)
+        return new_p, new_s, l
+
+    data_key = jax.random.PRNGKey(seed + 1)
+
+    def warmup():
+        tokens = jax.random.randint(jax.random.fold_in(data_key, 0),
+                                    (batch, seq), 0, cfg.vocab_size)
+        out = train_step(state["params"], state["opt"], tokens)
+        jax.block_until_ready(out[2])   # compile only; discard results
+
+    def make_block_fn(residency: int) -> Callable[[], None]:
+        def block():
+            i = state["block"]
+            tokens = jax.random.randint(
+                jax.random.fold_in(data_key, i), (batch, seq), 0,
+                cfg.vocab_size)
+            p, o, l = train_step(state["params"], state["opt"], tokens)
+            jax.block_until_ready(l)
+            state["params"], state["opt"] = p, o
+            state["block"] = i + 1
+            if (checkpointer is not None and checkpoint_every
+                    and (i + 1) % checkpoint_every == 0):
+                checkpointer.save(i + 1, {"params": p, "opt": o},
+                                  {"job": name})
+        return block
+
+    return ExecutorJob(name=name, num_blocks=blocks - state["block"],
+                       max_residency=max_residency,
+                       make_block_fn=make_block_fn, arrival=arrival,
+                       warmup_fn=warmup)
+
+
+def make_serve_job(
+    cfg: ArchConfig,
+    name: str,
+    *,
+    blocks: int,
+    tokens_per_block: int = 8,
+    batch: int = 2,
+    prompt_len: int = 16,
+    max_residency: int = 4,
+    arrival: float = 0.0,
+    seed: int = 0,
+) -> ExecutorJob:
+    """A serving job: ``blocks`` decode chunks of ``tokens_per_block`` each
+    against a live KV cache (prefill happens in the first block)."""
+    key = jax.random.PRNGKey(seed)
+    max_seq = prompt_len + blocks * tokens_per_block + 8
+    state: Dict = {"params": lm.init(cfg, key), "caches": None,
+                   "lengths": None, "token": None}
+
+    @jax.jit
+    def do_prefill(params, tokens):
+        return lm.prefill(cfg, params, tokens, max_seq=max_seq)
+
+    @jax.jit
+    def do_decode(params, token, caches, lengths):
+        logits, caches = lm.decode_step(cfg, params, token, caches, lengths)
+        return jnp.argmax(logits, -1), caches
+
+    prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+
+    def warmup():
+        logits, caches = do_prefill(state["params"], prompt)
+        tok = jnp.argmax(logits, -1)
+        lengths = jnp.full((batch,), prompt_len, jnp.int32)
+        out = do_decode(state["params"], tok, caches, lengths)
+        jax.block_until_ready(out[0])   # compile only; discard results
+
+    def make_block_fn(residency: int) -> Callable[[], None]:
+        def block():
+            if state["caches"] is None:
+                logits, caches = do_prefill(state["params"], prompt)
+                state["caches"] = caches
+                state["lengths"] = jnp.full((batch,), prompt_len, jnp.int32)
+                state["token"] = jnp.argmax(logits, -1)
+            for _ in range(tokens_per_block):
+                tok, caches = do_decode(state["params"], state["token"],
+                                        state["caches"], state["lengths"])
+                state["token"] = tok
+                state["caches"] = caches
+                state["lengths"] = state["lengths"] + 1
+            jax.block_until_ready(state["token"])
+        return block
+
+    return ExecutorJob(name=name, num_blocks=blocks,
+                       max_residency=max_residency,
+                       make_block_fn=make_block_fn, arrival=arrival,
+                       warmup_fn=warmup)

@@ -1,0 +1,68 @@
+"""Multiprogram performance metrics (paper Section 6).
+
+* STP  — system throughput (Eyerman & Eeckhout [9]): sum of normalized
+  progress, ``STP = sum_i T_solo_i / T_multi_i`` (higher is better).
+* ANTT — average normalized turnaround time: ``mean_i T_multi_i / T_solo_i``
+  (lower is better).
+* StrictF — fairness (Vandierendonck & Seznec [36]): ratio of minimum to
+  maximum slowdown; 1.0 means perfectly fair.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence
+
+
+@dataclass(frozen=True)
+class WorkloadMetrics:
+    stp: float
+    antt: float
+    fairness: float
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"stp": self.stp, "antt": self.antt, "fairness": self.fairness}
+
+
+def slowdowns(turnaround: Dict[str, float],
+              solo: Dict[str, float]) -> List[float]:
+    out = []
+    for key, multi in turnaround.items():
+        base = solo[key]
+        if base <= 0:
+            raise ValueError(f"non-positive solo runtime for {key}")
+        out.append(multi / base)
+    return out
+
+
+def evaluate(turnaround: Dict[str, float],
+             solo: Dict[str, float]) -> WorkloadMetrics:
+    """Compute STP/ANTT/StrictF for one multiprogrammed run.
+
+    ``turnaround`` maps kernel keys to multiprogram turnaround times;
+    ``solo`` maps the same keys to their isolated runtimes.
+    """
+    sd = slowdowns(turnaround, solo)
+    stp = sum(1.0 / s for s in sd)
+    antt = sum(sd) / len(sd)
+    fairness = min(sd) / max(sd)
+    return WorkloadMetrics(stp=stp, antt=antt, fairness=fairness)
+
+
+def geomean(values: Iterable[float]) -> float:
+    vals = [v for v in values]
+    if not vals:
+        return float("nan")
+    if any(v <= 0 for v in vals):
+        raise ValueError("geomean requires positive values")
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def summarize(per_workload: Sequence[WorkloadMetrics]) -> WorkloadMetrics:
+    """Geometric means across workloads (as in the paper's Table 5)."""
+    return WorkloadMetrics(
+        stp=geomean(m.stp for m in per_workload),
+        antt=geomean(m.antt for m in per_workload),
+        fairness=geomean(m.fairness for m in per_workload),
+    )

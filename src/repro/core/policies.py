@@ -1,0 +1,443 @@
+"""Thread block scheduling policies (paper Section 5).
+
+All policies implement the same small interface consumed by both the
+discrete-event simulator and the real-JAX lane executor:
+
+* ``bind(sim)``            — attach to a machine (simulator/executor),
+* ``pick(sm) -> key|None`` — which kernel may issue its next block on ``sm``,
+* ``residency_cap(key, sm) -> int`` — per-kernel residency limit on ``sm``,
+* event hooks ``on_arrival`` / ``on_block_end`` / ``on_kernel_end``.
+
+Policies:
+
+* :class:`FIFO`      — Fermi baseline (Section 5.2.1): strict arrival order;
+  a later kernel issues only once every block of all earlier kernels has
+  been dispatched.
+* :class:`SJF` / :class:`LJF` — oracle orderings by true solo runtime
+  (Section 2 / Fig. 1).  SJF is the unrealizable upper bound.
+* :class:`MPMax`     — Just-in-Time MPMax (Section 5.2.2): FIFO order, but
+  each kernel reserves resources for one block of each *currently running*
+  co-runner; reservations are dropped when concurrency ceases.
+* :class:`SRTF`      — Section 5.1.1: sample newly arrived kernels on one SM,
+  broadcast the sampled ``t``, then run the predicted shortest-remaining-time
+  kernel exclusively; preemption happens only at block boundaries, so
+  hand-off delay emerges naturally.
+* :class:`SRTFAdaptive` — Section 5.1.2: SRTF plus a fairness monitor; when
+  the projected slowdown gap exceeds ``unfairness_threshold`` (0.5), switch
+  to sharing mode with the fastest kernel's residency capped at
+  ``shared_residency`` (3) and co-runners taking the remaining resources.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Dict, List, Optional
+
+_INF = float("inf")
+MAX_RESIDENCY_DEFAULT = 8
+
+
+class Policy:
+    """Base class: unlimited residency, no picks."""
+
+    name = "base"
+
+    def __init__(self):
+        self.sim = None
+
+    def bind(self, sim) -> None:
+        self.sim = sim
+
+    # -- event hooks ---------------------------------------------------------
+    def on_arrival(self, key: str) -> None:
+        pass
+
+    def on_block_end(self, key: str, sm: int) -> None:
+        pass
+
+    def on_kernel_end(self, key: str) -> None:
+        pass
+
+    # -- decisions ------------------------------------------------------------
+    def residency_cap(self, key: str, sm: int) -> int:
+        return self.sim.runs[key].spec.max_residency
+
+    def pick(self, sm: int) -> Optional[str]:
+        raise NotImplementedError
+
+    # -- helpers ---------------------------------------------------------------
+    def _fits(self, key: str, sm: int) -> bool:
+        return self.sim.can_fit(key, self.sim.sms[sm])
+
+
+class _OrderedPolicy(Policy):
+    """Strict-priority issue: the highest-priority kernel with undispatched
+    blocks blocks all later kernels (head-of-line semantics, as on Fermi)."""
+
+    def order(self) -> List[str]:
+        raise NotImplementedError
+
+    def pick(self, sm: int) -> Optional[str]:
+        for key in self.order():
+            if self.sim.runs[key].unissued > 0:
+                return key if self._fits(key, sm) else None
+        return None
+
+
+class FIFO(_OrderedPolicy):
+    name = "fifo"
+
+    def order(self) -> List[str]:
+        return self.sim.active_keys()
+
+
+class SJF(_OrderedPolicy):
+    """Oracle Shortest Job First: requires true solo runtimes."""
+
+    name = "sjf"
+    _sign = 1.0
+
+    def _runtime(self, key: str) -> float:
+        rt = self.sim.oracle_runtime(key)
+        if rt is None:
+            rt = self.sim.runs[key].spec.solo_staircase_runtime()
+        return rt
+
+    def order(self) -> List[str]:
+        keys = self.sim.active_keys()
+        return sorted(keys, key=lambda k: (self._sign * self._runtime(k),
+                                           self.sim.runs[k].order))
+
+
+class LJF(SJF):
+    name = "ljf"
+    _sign = -1.0
+
+
+class MPMax(Policy):
+    """Just-in-Time MPMax (Section 5.2.2).
+
+    In the normalised-resource model one block of kernel ``j`` occupies
+    ``1/R_j`` of an SM, so kernel ``k`` reserving one block for each running
+    co-runner caps its own residency at
+    ``floor(R_k * (1 - sum_j 1/R_j))`` (>= 1).
+    """
+
+    name = "mpmax"
+
+    def __init__(self):
+        super().__init__()
+        self._caps: Dict[str, int] = {}
+
+    def _recompute(self) -> None:
+        active = self.sim.active_keys()
+        self._caps = {}
+        for key in active:
+            spec = self.sim.runs[key].spec
+            reserved = sum(
+                self.sim.runs[other].spec.resource_fraction
+                for other in active if other != key)
+            cap = int(math.floor(spec.max_residency * (1.0 - reserved)))
+            self._caps[key] = max(1, cap)
+
+    def on_arrival(self, key: str) -> None:
+        self._recompute()
+
+    def on_kernel_end(self, key: str) -> None:
+        self._recompute()
+
+    def residency_cap(self, key: str, sm: int) -> int:
+        return self._caps.get(key, self.sim.runs[key].spec.max_residency)
+
+    def pick(self, sm: int) -> Optional[str]:
+        # FIFO order up to each kernel's MPMax limit; when a kernel hits its
+        # limit the next kernel in FIFO order gets to issue (Section 5.2.2).
+        for key in self.sim.active_keys():
+            if self.sim.runs[key].unissued > 0 and self._fits(key, sm):
+                return key
+        return None
+
+
+class SRTF(Policy):
+    """Shortest Remaining Time First with online sampling (Section 5.1.1)."""
+
+    name = "srtf"
+    sample_sm = 0
+
+    def __init__(self):
+        super().__init__()
+        self.eligible: set = set()       # kernels with a usable prediction
+        self.sampling: Optional[str] = None
+        self.sample_queue: deque = deque()
+
+    # ------------------------------------------------------------- sampling
+    def _start_next_sample(self) -> None:
+        while self.sampling is None and self.sample_queue:
+            key = self.sample_queue.popleft()
+            run = self.sim.runs.get(key)
+            if run is None or run.finished or key in self.eligible:
+                continue
+            self.sampling = key
+
+    def on_arrival(self, key: str) -> None:
+        active = self.sim.active_keys()
+        if len(active) == 1:
+            # Arrived on an idle machine: runs immediately; its predictions
+            # accumulate from its own execution.
+            self.eligible.add(key)
+        else:
+            self.sample_queue.append(key)
+            self._start_next_sample()
+
+    def on_block_end(self, key: str, sm: int) -> None:
+        if key == self.sampling and sm == self.sample_sm:
+            t = self.sim.predictor.state(key, sm).t
+            if t is not None:
+                self.sim.predictor.broadcast_t(key, t, from_sm=sm)
+                self.eligible.add(key)
+                self.sampling = None
+                self._start_next_sample()
+
+    def on_kernel_end(self, key: str) -> None:
+        self.eligible.discard(key)
+        if self.sampling == key:
+            self.sampling = None
+        if key in self.sample_queue:
+            self.sample_queue.remove(key)
+        self._start_next_sample()
+        # If only one kernel remains un-predicted, it no longer needs a
+        # sample to be scheduled.
+        active = self.sim.active_keys()
+        if len(active) == 1:
+            self.eligible.add(active[0])
+
+    # ------------------------------------------------------------- ranking
+    def _remaining(self, key: str, sm: int) -> float:
+        r = self.sim.predictor.remaining(key, sm)
+        if r is None:
+            r = self.sim.predictor.gpu_remaining(key)
+        return r if r is not None else _INF
+
+    def _candidates(self, sm: int) -> List[str]:
+        keys = [k for k in self.sim.active_keys()
+                if k in self.eligible and self.sim.runs[k].unissued > 0]
+        return sorted(keys, key=lambda k: (self._remaining(k, sm),
+                                           self.sim.runs[k].order))
+
+    # ----------------------------------------------------------------- pick
+    def pick(self, sm: int) -> Optional[str]:
+        if self.sampling is not None and sm == self.sample_sm:
+            key = self.sampling
+            if self.sim.runs[key].unissued > 0 and self._fits(key, sm):
+                return key
+            return None
+        for key in self._candidates(sm):
+            if self._fits(key, sm):
+                return key
+            # Exclusive execution: do not backfill behind the SRTF winner
+            # while its blocks (or a draining co-runner's) occupy the SM.
+            return None
+        return None
+
+
+class SRTFAdaptive(SRTF):
+    """SRTF with fairness-driven adaptive resource sharing (Section 5.1.2)."""
+
+    name = "srtf-adaptive"
+
+    def __init__(self, unfairness_threshold: float = 0.5,
+                 shared_residency: int = 3, hysteresis: float = 0.05):
+        super().__init__()
+        self.unfairness_threshold = unfairness_threshold
+        self.shared_residency = shared_residency
+        self.hysteresis = hysteresis
+        self.sharing = False
+        self._caps: Dict[str, int] = {}
+        self._excl_pred: Dict[str, float] = {}
+
+    # -------------------------------------------------------------- fairness
+    def _predictions(self) -> Optional[List[tuple]]:
+        """Return [(key, elapsed, remaining, solo_estimate)] or None."""
+        active = [k for k in self.sim.active_keys() if k in self.eligible]
+        if len(active) < 2:
+            return None
+        rows = []
+        for key in active:
+            rem = self.sim.predictor.gpu_remaining(key)
+            if rem is None:
+                return None
+            elapsed = self.sim.elapsed(key)
+            solo = self._excl_pred.get(key)
+            if solo is None:
+                solo = self.sim.predictor.gpu_predicted_total(key, self.sim.now)
+            if solo is None or solo <= 0:
+                return None
+            rows.append((key, elapsed, rem, solo))
+        return rows
+
+    @staticmethod
+    def _gap(slowdowns: List[float]) -> float:
+        return max(slowdowns) - min(slowdowns)
+
+    def _project_exclusive(self, rows) -> List[float]:
+        rows = sorted(rows, key=lambda r: r[2])
+        slow, acc = [], 0.0
+        for _, elapsed, rem, solo in rows:
+            acc += rem
+            slow.append((elapsed + acc) / solo)
+        return slow
+
+    def _project_sharing(self, rows) -> List[float]:
+        rows = sorted(rows, key=lambda r: r[2])
+        winner_key, w_elapsed, w_rem, w_solo = rows[0]
+        w_run = self.sim.runs[winner_key]
+        cur_cap = max(1, min(self._cap_now(winner_key),
+                             w_run.spec.max_residency))
+        shared_w = min(self.shared_residency, w_run.spec.max_residency)
+        ts1 = w_rem * cur_cap / shared_w
+        slow = [(w_elapsed + ts1) / w_solo]
+        for key, elapsed, rem, solo in rows[1:]:
+            run = self.sim.runs[key]
+            full = run.spec.max_residency
+            shared_cap = self._loser_cap(run.spec, rows[0][0])
+            cur = max(1, min(self._cap_now(key), full))
+            s_l = rem * cur / shared_cap      # time to finish at shared cap
+            if s_l <= ts1:
+                slow.append((elapsed + s_l) / solo)
+            else:
+                tail = (s_l - ts1) * shared_cap / full
+                slow.append((elapsed + ts1 + tail) / solo)
+        return slow
+
+    def _cap_now(self, key: str) -> int:
+        return self._caps.get(key, self.sim.runs[key].spec.max_residency)
+
+    def _loser_cap(self, spec, winner_key: str) -> int:
+        w_spec = self.sim.runs[winner_key].spec
+        shared_w = min(self.shared_residency, w_spec.max_residency)
+        free_frac = 1.0 - shared_w * w_spec.resource_fraction
+        return max(1, int(math.floor(free_frac * spec.max_residency)))
+
+    def _reevaluate(self) -> None:
+        rows = self._predictions()
+        if rows is None:
+            if self.sharing:
+                self.sharing = False
+                self._caps = {}
+                self.sim._sync_residency_caps()
+            return
+        gap_excl = self._gap(self._project_exclusive(rows))
+        gap_shared = self._gap(self._project_sharing(rows))
+        want_sharing = (
+            gap_excl > self.unfairness_threshold
+            and gap_shared < gap_excl - self.hysteresis)
+        new_caps: Dict[str, int] = {}
+        if want_sharing:
+            winner = min(rows, key=lambda r: r[2])[0]
+            for key, *_ in rows:
+                spec = self.sim.runs[key].spec
+                if key == winner:
+                    new_caps[key] = min(self.shared_residency,
+                                        spec.max_residency)
+                else:
+                    new_caps[key] = self._loser_cap(spec, winner)
+        if want_sharing != self.sharing or new_caps != self._caps:
+            self.sharing = want_sharing
+            self._caps = new_caps
+            self.sim._sync_residency_caps()
+
+    # ------------------------------------------------------------------ hooks
+    def on_arrival(self, key: str) -> None:
+        super().on_arrival(key)
+        self._reevaluate()
+
+    def on_block_end(self, key: str, sm: int) -> None:
+        super().on_block_end(key, sm)
+        if not self.sharing:
+            # Remember the exclusive-conditions prediction (Section 5.1.2:
+            # "the prediction from the exclusive part of a run").
+            pred = self.sim.predictor.gpu_predicted_total(key, self.sim.now)
+            if pred is not None:
+                self._excl_pred[key] = pred
+        self._reevaluate()
+
+    def on_kernel_end(self, key: str) -> None:
+        super().on_kernel_end(key)
+        self._excl_pred.pop(key, None)
+        self._reevaluate()
+
+    # -------------------------------------------------------------- decisions
+    def residency_cap(self, key: str, sm: int) -> int:
+        if self.sharing and key in self._caps:
+            return self._caps[key]
+        return self.sim.runs[key].spec.max_residency
+
+    def pick(self, sm: int) -> Optional[str]:
+        if not self.sharing:
+            return super().pick(sm)
+        if self.sampling is not None and sm == self.sample_sm:
+            key = self.sampling
+            if self.sim.runs[key].unissued > 0 and self._fits(key, sm):
+                return key
+            return None
+        # Sharing mode: co-run, shortest first, up to the adaptive caps.
+        for key in self._candidates(sm):
+            if self._fits(key, sm):
+                return key
+        return None
+
+
+class CappedFIFO(FIFO):
+    """FIFO with a fixed residency cap — used to reproduce the paper's
+    residency studies (Figs. 7/8/10), where residency is controlled by
+    inflating dynamic shared memory."""
+
+    name = "fifo-cap"
+
+    def __init__(self, cap: int = MAX_RESIDENCY_DEFAULT):
+        super().__init__()
+        self.cap = cap
+
+    def residency_cap(self, key: str, sm: int) -> int:
+        return self.cap
+
+
+class SRTFZeroSampling(SRTF):
+    """SRTF with oracle-provided runtimes instead of online sampling
+    (the paper's zero-sampling experiment, Section 6.2.2): isolates the
+    cost of sampling from the cost of hand-off delay.  Unrealizable, like
+    SJF, but diagnostic."""
+
+    name = "srtf-zero"
+
+    def on_arrival(self, key: str) -> None:
+        self.eligible.add(key)              # no sampling phase
+
+    def _remaining(self, key: str, sm: int) -> float:
+        rt = self.sim.oracle_runtime(key)
+        if rt is None:
+            return super()._remaining(key, sm)
+        run = self.sim.runs[key]
+        frac_left = 1.0 - run.done / max(1, run.spec.num_blocks)
+        return rt * frac_left
+
+
+POLICIES = {
+    "fifo": FIFO,
+    "fifo-cap": CappedFIFO,
+    "sjf": SJF,
+    "ljf": LJF,
+    "mpmax": MPMax,
+    "srtf": SRTF,
+    "srtf-zero": SRTFZeroSampling,
+    "srtf-adaptive": SRTFAdaptive,
+}
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    try:
+        return POLICIES[name](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; choose from {sorted(POLICIES)}") from None

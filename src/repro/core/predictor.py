@@ -1,0 +1,231 @@
+"""Structural Runtime Prediction (paper Sections 3-4).
+
+Implements:
+
+* the Staircase model (Eq. 1):          ``T = ceil(N / R) * t``
+* the Simple Slicing (SS) predictor     (Table 1 state, Algorithm 1 handlers,
+  Eq. 2 prediction), maintained per execution unit ("SM" on the GPU, "lane"
+  on a TPU pod) and per kernel/job.
+
+The predictor is backend-independent: the discrete-event simulator
+(:mod:`repro.core.simulator`) and the real-JAX lane executor
+(:mod:`repro.core.executor`) both drive it through the four events of
+Algorithm 1 (``on_launch`` / ``on_block_start`` / ``on_block_end`` /
+``on_kernel_end``) plus the residency-change reslice of Section 3.4.3.
+
+Terminology note: we keep the paper's names (SM, thread block, kernel,
+residency).  In the TPU adaptation SM=lane, block=step, kernel=job; the math
+is identical (see DESIGN.md Section 2).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+def staircase_runtime(num_blocks: int, residency: int, t: float) -> float:
+    """Eq. 1: total time for ``num_blocks`` at residency ``residency``.
+
+    ``T = ceil(N / R) * t``.
+    """
+    if num_blocks <= 0:
+        return 0.0
+    residency = max(1, int(residency))
+    return math.ceil(num_blocks / residency) * float(t)
+
+
+def staircase_blocks_in(time: float, residency: int, t: float) -> int:
+    """Inverse of Eq. 1 (used by SRTF/Adaptive, Section 5.1.2).
+
+    Number of blocks completed within ``time`` at residency ``residency``:
+    ``N = T * R / t`` (paper's closed form, non-staircase for tractability).
+    """
+    if t <= 0 or time <= 0:
+        return 0
+    return int((time * max(1, residency)) / t)
+
+
+@dataclass
+class PerSMState:
+    """Table 1: per-kernel state maintained on each SM/lane."""
+
+    total_blocks: int = 0          # Total_Blocks: blocks expected on this SM
+    done_blocks: int = 0           # Done_Blocks: blocks completed on this SM
+    resident_blocks: int = 1       # Resident_Blocks: residency used in Eq. 2
+    t: Optional[float] = None      # duration of a thread block (sampled)
+    pred_cycles: Optional[float] = None  # Pred_Cycles: Eq. 2 output
+    reslice: bool = True           # Reslice: new slice has started
+    # --- bookkeeping for Active_Kernel_Cycles -------------------------------
+    active_cycles: float = 0.0     # accumulated cycles with >=1 running block
+    running_count: int = 0
+    running_since: float = 0.0
+    # --- bookkeeping for Block_Start[] --------------------------------------
+    block_start: Dict[int, float] = field(default_factory=dict)
+    blocks_started: int = 0
+
+    def active_at(self, now: float) -> float:
+        if self.running_count > 0:
+            return self.active_cycles + (now - self.running_since)
+        return self.active_cycles
+
+
+class SimpleSlicingPredictor:
+    """The Simple Slicing (SS) online runtime predictor (Section 4).
+
+    One instance serves a whole machine: state is per ``(kernel, sm)``.
+    Predictions estimate *total* runtime under current conditions (Eq. 2):
+
+        Pred = Active_Kernel_Cycles
+               + (Total_Blocks - Done_Blocks) / Resident_Blocks * t
+
+    ``t`` is resampled at slice boundaries: kernel launch/end (Algorithm 1)
+    and residency changes (Section 3.4.3 / 3.4.4).  Per the paper's text
+    ("Equation 2 is not [a] step function"), the remaining-work term uses a
+    plain division, not the Eq. 1 ceiling.
+    """
+
+    def __init__(self, n_sm: int):
+        self.n_sm = n_sm
+        self._state: Dict[str, Dict[int, PerSMState]] = {}
+
+    # ------------------------------------------------------------------ state
+    def state(self, kernel: str, sm: int) -> PerSMState:
+        return self._state[kernel][sm]
+
+    def has_kernel(self, kernel: str) -> bool:
+        return kernel in self._state
+
+    def drop_kernel(self, kernel: str) -> None:
+        self._state.pop(kernel, None)
+
+    def kernels(self):
+        return list(self._state)
+
+    # ------------------------------------------------------- Algorithm 1 ----
+    def on_launch(self, kernel: str, total_blocks: int, residency: int) -> None:
+        """ONLAUNCH: initialise per-SM counters for a newly launched kernel."""
+        per_sm = {}
+        expected = math.ceil(total_blocks / self.n_sm)
+        for sm in range(self.n_sm):
+            per_sm[sm] = PerSMState(
+                total_blocks=expected,
+                resident_blocks=max(1, residency),
+                reslice=True,
+            )
+        self._state[kernel] = per_sm
+        # A launch starts a new slice for every *other* running kernel too
+        # (slice boundaries are kernel launches and endings, Section 4).
+        for other, states in self._state.items():
+            if other == kernel:
+                continue
+            for st in states.values():
+                st.reslice = True
+
+    def on_kernel_end(self, kernel: str) -> None:
+        """ONKERNELEND: mark a new slice for all still-running kernels."""
+        for other, states in self._state.items():
+            if other == kernel:
+                continue
+            for st in states.values():
+                st.reslice = True
+
+    def on_block_start(self, kernel: str, sm: int, blkindex: int, now: float) -> None:
+        st = self.state(kernel, sm)
+        st.block_start[blkindex] = now
+        st.blocks_started += 1
+        if st.running_count == 0:
+            st.running_since = now
+        st.running_count += 1
+
+    def on_block_end(self, kernel: str, sm: int, blkindex: int, now: float) -> float:
+        """ONBLOCKEND + Eq. 2.  Returns the new Pred_Cycles for (kernel, sm)."""
+        st = self.state(kernel, sm)
+        st.done_blocks += 1
+        if st.reslice or st.t is None:
+            start = st.block_start.get(blkindex)
+            if start is not None:
+                st.t = now - start
+            st.reslice = False
+        st.block_start.pop(blkindex, None)
+        st.running_count = max(0, st.running_count - 1)
+        if st.running_count == 0:
+            st.active_cycles += now - st.running_since
+        return self.predict(kernel, sm, now)
+
+    # --------------------------------------------------------- reslicing ----
+    def on_residency_change(self, kernel: str, sm: int, new_residency: int) -> None:
+        """Section 3.4.3: resample ``t`` whenever residency changes."""
+        st = self.state(kernel, sm)
+        new_residency = max(1, int(new_residency))
+        if st.resident_blocks != new_residency:
+            st.resident_blocks = new_residency
+            st.reslice = True
+
+    def reslice_all(self, kernel: Optional[str] = None) -> None:
+        """Force a new slice (e.g. co-runner set changed, Section 3.4.4)."""
+        targets = [kernel] if kernel is not None else list(self._state)
+        for k in targets:
+            for st in self._state.get(k, {}).values():
+                st.reslice = True
+
+    def broadcast_t(self, kernel: str, t: float, from_sm: int) -> None:
+        """SRTF sampling (Section 5.1.1): copy the sample SM's ``t`` to the
+        other SMs as their initial estimate."""
+        for sm, st in self._state.get(kernel, {}).items():
+            if sm == from_sm:
+                continue
+            if st.t is None:
+                st.t = t
+                st.reslice = False
+
+    # ------------------------------------------------------- predictions ----
+    def predict(self, kernel: str, sm: int, now: float) -> Optional[float]:
+        """Eq. 2 prediction of *total* runtime for (kernel, sm)."""
+        st = self.state(kernel, sm)
+        if st.t is None:
+            return None
+        remaining_blocks = max(0, st.total_blocks - st.done_blocks)
+        remaining = (remaining_blocks / max(1, st.resident_blocks)) * st.t
+        st.pred_cycles = st.active_at(now) + remaining
+        return st.pred_cycles
+
+    def remaining(self, kernel: str, sm: int) -> Optional[float]:
+        """Predicted remaining cycles for (kernel, sm) — the SRTF ranking key."""
+        if kernel not in self._state:
+            return None
+        st = self._state[kernel][sm]
+        if st.t is None:
+            return None
+        remaining_blocks = max(0, st.total_blocks - st.done_blocks)
+        return (remaining_blocks / max(1, st.resident_blocks)) * st.t
+
+    def gpu_remaining(self, kernel: str) -> Optional[float]:
+        """Machine-level remaining-time estimate: mean over SMs with samples.
+
+        Used by SRTF/Adaptive's slowdown projection and for logging; per-SM
+        scheduling decisions use :meth:`remaining` directly.
+        """
+        if kernel not in self._state:
+            return None
+        vals = []
+        for sm in self._state[kernel]:
+            r = self.remaining(kernel, sm)
+            if r is not None:
+                vals.append(r)
+        if not vals:
+            return None
+        return sum(vals) / len(vals)
+
+    def gpu_predicted_total(self, kernel: str, now: float) -> Optional[float]:
+        if kernel not in self._state:
+            return None
+        vals = []
+        for sm in self._state[kernel]:
+            p = self.predict(kernel, sm, now)
+            if p is not None:
+                vals.append(p)
+        if not vals:
+            return None
+        return sum(vals) / len(vals)

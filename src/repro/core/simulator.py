@@ -1,0 +1,395 @@
+"""Event-driven simulator of a multi-SM GPU executing concurrent grids.
+
+This is the GPGPU-Sim analogue used for the paper's evaluation (Section 6):
+15 SMs (Table 4), block-granular resource allocation, a pluggable thread
+block scheduler (:mod:`repro.core.policies`), and the Simple Slicing
+predictor (:mod:`repro.core.predictor`) wired to the four Algorithm-1 events.
+
+Design notes
+------------
+* Resources: each SM has 8 block slots, 1536 threads, and one normalised
+  "fraction" pool (1 block of kernel k consumes ``1/R_k`` of an SM — see
+  ``KernelSpec.resource_fraction``).  A block is issued only if all three fit
+  and the policy's residency cap for that kernel allows it.
+* Block durations are sampled at issue time from the kernel's duration model
+  under the *current* SM conditions (residency, co-resident warps), times a
+  per-block noise factor that is indexed by global block number so that solo
+  and multiprogrammed runs of the same kernel share an identical noise
+  stream (slowdowns then measure scheduling, not sampling luck).
+* Staggered starts (Section 3.3): on stagger-affected SMs, first-wave issues
+  are serialised by an issue *gate*; the scheduler re-tries when the gate
+  opens.
+* The same policy/predictor objects are reused unchanged by the real-JAX
+  lane executor (:mod:`repro.core.executor`).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .predictor import SimpleSlicingPredictor
+from .workload import (
+    Arrival,
+    KernelSpec,
+    MAX_BLOCK_SLOTS,
+    MAX_THREADS_PER_SM,
+    N_SM,
+)
+
+_EPS = 1e-9
+
+
+@dataclass
+class BlockRecord:
+    """One executed thread block (for traces / figure benchmarks)."""
+
+    kernel: str
+    sm: int
+    slot: int
+    start: float
+    end: float
+
+
+@dataclass
+class PredictionRecord:
+    """One Eq. 2 prediction event (for predictor-accuracy benchmarks)."""
+
+    kernel: str
+    sm: int
+    time: float            # when the prediction was made
+    done_blocks: int       # blocks done on this SM at prediction time
+    predicted_total: float # Pred_Cycles (total runtime from kernel start)
+
+
+@dataclass
+class KernelRun:
+    """Dynamic state of one kernel instance inside the simulator."""
+
+    key: str
+    spec: KernelSpec
+    arrival_time: float
+    order: int
+    issued: int = 0
+    done: int = 0
+    finish_time: Optional[float] = None
+    first_issue_time: Optional[float] = None
+    issued_per_sm: Dict[int, int] = field(default_factory=dict)
+    resident_per_sm: Dict[int, int] = field(default_factory=dict)
+    issue_gate: Dict[int, float] = field(default_factory=dict)
+    stagger_sm: Dict[int, bool] = field(default_factory=dict)
+    noise: Optional[np.ndarray] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_time is not None
+
+    @property
+    def unissued(self) -> int:
+        return self.spec.num_blocks - self.issued
+
+    def resident(self, sm: int) -> int:
+        return self.resident_per_sm.get(sm, 0)
+
+
+class SMState:
+    """Resource pools of one streaming multiprocessor (Table 4)."""
+
+    __slots__ = ("index", "used_threads", "used_fraction", "free_slots", "resident")
+
+    def __init__(self, index: int):
+        self.index = index
+        self.used_threads = 0
+        self.used_fraction = 0.0
+        self.free_slots = list(range(MAX_BLOCK_SLOTS - 1, -1, -1))
+        self.resident: Dict[int, str] = {}  # slot -> kernel key
+
+    def fits(self, spec: KernelSpec) -> bool:
+        return (
+            bool(self.free_slots)
+            and self.used_threads + spec.threads_per_block <= MAX_THREADS_PER_SM
+            and self.used_fraction + spec.resource_fraction <= 1.0 + _EPS
+        )
+
+    def alloc(self, key: str, spec: KernelSpec) -> int:
+        slot = self.free_slots.pop()
+        self.resident[slot] = key
+        self.used_threads += spec.threads_per_block
+        self.used_fraction += spec.resource_fraction
+        return slot
+
+    def free(self, slot: int, spec: KernelSpec) -> None:
+        del self.resident[slot]
+        self.free_slots.append(slot)
+        self.used_threads -= spec.threads_per_block
+        self.used_fraction = max(0.0, self.used_fraction - spec.resource_fraction)
+
+
+# Event kinds, in tie-break priority order (lower sorts first at equal time).
+_ARRIVAL, _BLOCK_END, _TRY_ISSUE = 0, 1, 2
+
+
+class Simulator:
+    """Discrete-event GPU simulator with a pluggable TBS policy."""
+
+    def __init__(
+        self,
+        arrivals: Sequence[Arrival],
+        policy,
+        n_sm: int = N_SM,
+        seed: int = 0,
+        record_trace: bool = False,
+        record_predictions: bool = False,
+        oracle_runtimes: Optional[Dict[str, float]] = None,
+    ):
+        self.n_sm = n_sm
+        self.policy = policy
+        self.seed = seed
+        self.now = 0.0
+        self.predictor = SimpleSlicingPredictor(n_sm)
+        self.sms = [SMState(i) for i in range(n_sm)]
+        self.runs: Dict[str, KernelRun] = {}
+        self.oracle_runtimes = oracle_runtimes or {}
+        self._events: List[Tuple[float, int, int, tuple]] = []
+        self._seq = itertools.count()
+        self.trace: List[BlockRecord] = [] if record_trace else None
+        self.predictions: List[PredictionRecord] = [] if record_predictions else None
+        self._retry_scheduled: Dict[Tuple[int, float], bool] = {}
+
+        for order, arr in enumerate(sorted(arrivals, key=lambda a: a.time)):
+            run = KernelRun(arr.key, arr.spec, arr.time, order)
+            self._init_kernel_rng(run)
+            self.runs[arr.key] = run
+            self._push(arr.time, _ARRIVAL, (arr.key,))
+
+        policy.bind(self)
+
+    # ------------------------------------------------------------ rng setup
+    def _init_kernel_rng(self, run: KernelRun) -> None:
+        # Stable per-kernel streams: identical noise per block index across
+        # solo and multiprogrammed runs with the same seed, and across
+        # processes (zlib.crc32 is stable; Python's hash() is salted).
+        name_hash = zlib.crc32(run.spec.name.encode()) % (2 ** 31)
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=(self.seed, name_hash, run.order)))
+        spec = run.spec
+        if spec.rsd > 0.0:
+            sigma = math.sqrt(math.log(1.0 + spec.rsd * spec.rsd))
+            run.noise = rng.lognormal(
+                mean=-0.5 * sigma * sigma, sigma=sigma, size=spec.num_blocks)
+        else:
+            run.noise = np.ones(spec.num_blocks)
+        for sm in range(self.n_sm):
+            run.stagger_sm[sm] = (
+                spec.stagger_frac > 0.0 and rng.random() < spec.stagger_sm_prob)
+
+    # --------------------------------------------------------------- events
+    def _push(self, time: float, kind: int, data: tuple) -> None:
+        heapq.heappush(self._events, (time, kind, next(self._seq), data))
+
+    def run(self, until: Optional[float] = None) -> "SimResult":
+        while self._events:
+            time, kind, _, data = heapq.heappop(self._events)
+            if until is not None and time > until:
+                break
+            self.now = time
+            if kind == _ARRIVAL:
+                self._handle_arrival(*data)
+            elif kind == _BLOCK_END:
+                self._handle_block_end(*data)
+            else:
+                self._try_issue(self.sms[data[0]])
+        return SimResult(self)
+
+    # ------------------------------------------------------------- handlers
+    def _handle_arrival(self, key: str) -> None:
+        run = self.runs[key]
+        self.predictor.on_launch(key, run.spec.num_blocks, run.spec.max_residency)
+        self.policy.on_arrival(key)
+        self._sync_residency_caps()
+        for sm in self.sms:
+            self._try_issue(sm)
+
+    def _handle_block_end(self, key: str, sm_index: int, slot: int) -> None:
+        run = self.runs[key]
+        sm = self.sms[sm_index]
+        sm.free(slot, run.spec)
+        run.resident_per_sm[sm_index] -= 1
+        run.done += 1
+        pred = self.predictor.on_block_end(key, sm_index, slot, self.now)
+        if self.predictions is not None and pred is not None:
+            st = self.predictor.state(key, sm_index)
+            self.predictions.append(PredictionRecord(
+                key, sm_index, self.now, st.done_blocks, pred))
+        self.policy.on_block_end(key, sm_index)
+        if run.done == run.spec.num_blocks:
+            run.finish_time = self.now
+            self.predictor.on_kernel_end(key)
+            self.policy.on_kernel_end(key)
+            self._sync_residency_caps()
+            for other_sm in self.sms:
+                self._try_issue(other_sm)
+        else:
+            self._try_issue(sm)
+
+    # ---------------------------------------------------------------- issue
+    def active_keys(self) -> List[str]:
+        """Arrived, unfinished kernels in arrival order."""
+        return [
+            k for k, r in sorted(self.runs.items(), key=lambda kv: kv[1].order)
+            if r.arrival_time <= self.now + _EPS and not r.finished
+        ]
+
+    def can_fit(self, key: str, sm: SMState) -> bool:
+        run = self.runs[key]
+        if run.unissued <= 0:
+            return False
+        cap = min(run.spec.max_residency,
+                  self.policy.residency_cap(key, sm.index))
+        if run.resident(sm.index) >= cap:
+            return False
+        return sm.fits(run.spec)
+
+    def _try_issue(self, sm: SMState) -> None:
+        # Issue as many blocks as the policy allows in this batch, then
+        # compute durations with the *post-batch* SM conditions: blocks that
+        # start at the same instant all execute at the final residency (as on
+        # hardware, where a whole wave is dispatched together) rather than at
+        # the transient residency seen mid-dispatch.
+        batch: List[tuple] = []  # (run, slot, noise_idx, first_wave)
+        while True:
+            key = self.policy.pick(sm.index)
+            if key is None:
+                break
+            run = self.runs[key]
+            gate = run.issue_gate.get(sm.index, 0.0)
+            if gate > self.now + _EPS:
+                self._push(gate, _TRY_ISSUE, (sm.index,))
+                break
+            if not self.can_fit(key, sm):
+                break  # defensive: policies only pick issuable kernels
+            batch.append(self._allocate_block(run, sm))
+        for run, slot, noise_idx, first_wave in batch:
+            self._finalize_block(run, sm, slot, noise_idx, first_wave)
+
+    def _allocate_block(self, run: KernelRun, sm: SMState) -> tuple:
+        spec = run.spec
+        slot = sm.alloc(run.key, spec)
+        run.resident_per_sm[sm.index] = run.resident(sm.index) + 1
+        issued_on_sm = run.issued_per_sm.get(sm.index, 0)
+        run.issued_per_sm[sm.index] = issued_on_sm + 1
+        if run.first_issue_time is None:
+            run.first_issue_time = self.now
+        first_wave = issued_on_sm < spec.max_residency
+        noise_idx = run.issued
+        run.issued += 1
+        if first_wave and run.stagger_sm.get(sm.index, False):
+            run.issue_gate[sm.index] = self.now + spec.stagger_frac * spec.mean_t
+        return (run, slot, noise_idx, first_wave)
+
+    def _finalize_block(self, run: KernelRun, sm: SMState, slot: int,
+                        noise_idx: int, first_wave: bool) -> None:
+        spec = run.spec
+        residency = run.resident(sm.index)
+        corunner_warps = 0.0
+        for other_key in set(sm.resident.values()):
+            if other_key == run.key:
+                continue
+            other = self.runs[other_key]
+            corunner_warps += (
+                other.spec.corunner_pressure
+                * other.resident(sm.index) * other.spec.warps_per_block)
+
+        base = spec.duration(
+            _NO_NOISE_RNG, residency, corunner_warps, first_wave)
+        duration = base * float(run.noise[noise_idx])
+
+        self.predictor.on_block_start(run.key, sm.index, slot, self.now)
+        self._push(self.now + duration, _BLOCK_END, (run.key, sm.index, slot))
+        if self.trace is not None:
+            self.trace.append(BlockRecord(
+                run.key, sm.index, slot, self.now, self.now + duration))
+
+    # ------------------------------------------------------------- plumbing
+    def _sync_residency_caps(self) -> None:
+        """Propagate the policy's current residency caps into the predictor
+        (Section 3.4.3: residency changes start a new slice)."""
+        for key in self.active_keys():
+            run = self.runs[key]
+            for sm in range(self.n_sm):
+                cap = min(run.spec.max_residency,
+                          self.policy.residency_cap(key, sm))
+                self.predictor.on_residency_change(key, sm, cap)
+
+    def elapsed(self, key: str) -> float:
+        return self.now - self.runs[key].arrival_time
+
+    def oracle_runtime(self, key: str) -> Optional[float]:
+        run = self.runs[key]
+        return self.oracle_runtimes.get(run.spec.name)
+
+
+class _NoNoiseRNG:
+    """Duration model RNG stub: noise is applied separately (see module doc)."""
+
+    def lognormal(self, mean: float = 0.0, sigma: float = 1.0) -> float:  # pragma: no cover
+        return 1.0
+
+
+_NO_NOISE_RNG = _NoNoiseRNG()
+
+
+class SimResult:
+    """Outcome of one simulation: per-kernel turnarounds and traces."""
+
+    def __init__(self, sim: Simulator):
+        self.sim = sim
+        self.turnaround: Dict[str, float] = {}
+        self.finish: Dict[str, float] = {}
+        self.arrival: Dict[str, float] = {}
+        self.name: Dict[str, str] = {}
+        for key, run in sim.runs.items():
+            if run.finish_time is None:
+                continue
+            self.turnaround[key] = run.finish_time - run.arrival_time
+            self.finish[key] = run.finish_time
+            self.arrival[key] = run.arrival_time
+            self.name[key] = run.spec.name
+
+    @property
+    def makespan(self) -> float:
+        return max(self.finish.values(), default=0.0)
+
+
+def simulate(
+    arrivals: Sequence[Arrival],
+    policy_factory: Callable[[], object],
+    n_sm: int = N_SM,
+    seed: int = 0,
+    record_trace: bool = False,
+    record_predictions: bool = False,
+    oracle_runtimes: Optional[Dict[str, float]] = None,
+) -> SimResult:
+    sim = Simulator(
+        arrivals, policy_factory(), n_sm=n_sm, seed=seed,
+        record_trace=record_trace, record_predictions=record_predictions,
+        oracle_runtimes=oracle_runtimes)
+    return sim.run()
+
+
+def solo_runtime(
+    spec: KernelSpec,
+    policy_factory: Callable[[], object],
+    n_sm: int = N_SM,
+    seed: int = 0,
+) -> float:
+    """Runtime of ``spec`` running alone (same seed => same noise stream)."""
+    res = simulate([Arrival(spec, 0.0, uid=f"{spec.name}#0")],
+                   policy_factory, n_sm=n_sm, seed=seed)
+    return res.turnaround[f"{spec.name}#0"]

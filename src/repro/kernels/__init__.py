@@ -1,0 +1,4 @@
+# Compute hot-spot kernels: Pallas TPU implementations (validated with
+# interpret=True on CPU), efficient XLA formulations (ops.py), and pure-jnp
+# oracles (ref.py).  The paper's own contribution is a scheduler (no custom
+# kernels); these serve the framework's model zoo.

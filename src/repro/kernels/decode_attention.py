@@ -1,0 +1,107 @@
+"""Pallas TPU decode attention: one query token per sequence against a
+padded KV cache (flash-decode).
+
+Grid (batch, kv_block) with kv_block innermost: the online-softmax state
+for the single query position lives in VMEM scratch; each step streams one
+[block_k, D] cache tile from HBM into VMEM — decode is bandwidth-bound, so
+the tile size trades VMEM footprint against DMA efficiency.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_k: int, n_k: int, scale: float):
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # [KV, G, D]
+    k = k_ref[0].astype(jnp.float32)                    # [bk, KV, D]
+    v = v_ref[0].astype(jnp.float32)                    # [bk, KV, Dv]
+    length = len_ref[0]
+
+    s = jnp.einsum("hgd,khd->hgk", q, k)                # [KV, G, bk]
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 2)
+    valid = k_pos < length
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + \
+        jnp.einsum("hgk,khd->hgd", p, v)
+    m_scr[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray,          # [B, H, D]
+    k_cache: jnp.ndarray,    # [B, S, KV, D]
+    v_cache: jnp.ndarray,    # [B, S, KV, Dv]
+    length: jnp.ndarray,     # [B]
+    *,
+    scale: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    kc, vc = k_cache, v_cache
+    if pad:
+        kc = jnp.pad(kc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_k = kc.shape[1] // block_k
+    qr = q.reshape(B, KV, G, D)
+
+    kernel = functools.partial(_kernel, block_k=block_k, n_k=n_k,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+            pl.BlockSpec((1, KV, G, D), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, D), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, Dv), lambda b, j: (b, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, Dv), lambda b, j: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Dv), q.dtype),
+        scratch_shapes=[
+            _scratch((KV, G)), _scratch((KV, G)), _scratch((KV, G, Dv)),
+        ],
+        interpret=interpret,
+    )(length.astype(jnp.int32), qr, kc, vc)
+    return out.reshape(B, H, Dv)
+
+
+def _scratch(shape):
+    if hasattr(pl, "ScratchShape"):
+        return pl.ScratchShape(shape, jnp.float32)
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel for the RG-LRU gated linear recurrence.
+
+Grid (batch, chunk) with the chunk axis innermost and the [C] hidden state
+in VMEM scratch.  Within a chunk the recurrence is evaluated by a
+``fori_loop`` over time steps — each step is a pure VPU (elementwise)
+update across the channel lanes, so the kernel is bandwidth-bound exactly
+like the recurrence itself; chunking exists to bound the VMEM-resident
+gate/input tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, ga_ref, gi_ref, loga_ref, h_ref, state_out_ref,
+            state_scr, *, chunk: int, n_chunks: int, c_const: float):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)                    # [Q, C]
+    ga = ga_ref[0].astype(jnp.float32)
+    gi = gi_ref[0].astype(jnp.float32)
+    la = loga_ref[...].astype(jnp.float32)              # [C]
+
+    log_at = c_const * la[None, :] * ga                 # [Q, C] <= 0
+    at = jnp.exp(log_at)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 0.0))
+    bt = beta * (gi * x)
+
+    def step(t, h):
+        h = at[t] * h + bt[t]
+        h_ref[0, t] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, state_scr[...])
+    state_scr[...] = h
+
+    @pl.when(cj == n_chunks - 1)
+    def _finish():
+        state_out_ref[0] = h
+
+
+def rglru_pallas(
+    x: jnp.ndarray,          # [B, S, C]
+    gate_a: jnp.ndarray,     # [B, S, C]
+    gate_i: jnp.ndarray,     # [B, S, C]
+    log_a: jnp.ndarray,      # [C]
+    *,
+    initial_state: Optional[jnp.ndarray] = None,
+    c: float = 8.0,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if initial_state is not None:
+        from . import ops
+        return ops.rglru(x, gate_a, gate_i, log_a,
+                         initial_state=initial_state, c=c, backend="xla")
+    B, S, C = x.shape
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S
+    nc = S // Q
+
+    kernel = functools.partial(_kernel, chunk=Q, n_chunks=nc, c_const=c)
+    h, state = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, C), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, Q, C), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, Q, C), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((C,), lambda b, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, C), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, C), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, C), x.dtype),
+            jax.ShapeDtypeStruct((B, C), jnp.float32),
+        ],
+        scratch_shapes=[_scratch((C,))],
+        interpret=interpret,
+    )(x, gate_a, gate_i, log_a)
+    return h, state
+
+
+def _scratch(shape):
+    if hasattr(pl, "ScratchShape"):
+        return pl.ScratchShape(shape, jnp.float32)
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record the compiled artifact's roofline terms.
+
+The two lines above MUST stay the first statements in this module — JAX
+locks the device count on first init, and the dry-run (and only the
+dry-run) needs 512 placeholder host devices.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+        [--out artifacts/dryrun]
+
+Each cell writes ``<out>/<mesh>/<arch>__<shape>.json`` with:
+  flops / bytes from ``compiled.cost_analysis()`` (per-device, post-SPMD),
+  per-device memory from ``compiled.memory_analysis()``,
+  per-collective-op byte totals parsed from the optimized HLO,
+  lowering and compile wall times.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_arch
+from repro.configs.shapes import SHAPE_ORDER, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, build_unit_probes
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO
+    (per-device, since post-SPMD shapes are per-device)."""
+    out = {c: {"bytes": 0, "count": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+(.*?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if m.group(3) == "-done":
+            continue  # avoid double-counting async pairs
+        out[kind]["bytes"] += _shape_bytes(m.group(1))
+        out[kind]["count"] += 1
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: Path, verbose: bool = True) -> dict:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+    }
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        record["status"] = "skipped"
+        record["why"] = why
+        _write(out_dir, mesh_name, arch_id, shape_name, record)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    bundle = build_step(cfg, shape, mesh=mesh)
+    with mesh:
+        lowered = bundle.fn.lower(*bundle.arg_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    record["status"] = "ok"
+    record["lower_s"] = round(t_lower, 2)
+    record["compile_s"] = round(t_compile, 2)
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        record["cost_analysis"] = {
+            k: v for k, v in cost.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed"))
+        }
+    except Exception as e:  # pragma: no cover
+        record["cost_analysis_error"] = str(e)
+
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            attr: getattr(mem, attr)
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes")
+            if hasattr(mem, attr)
+        }
+    except Exception as e:  # pragma: no cover
+        record["memory_analysis_error"] = str(e)
+
+    try:
+        hlo = compiled.as_text()
+        record["collectives"] = collective_bytes(hlo)
+        record["hlo_size_chars"] = len(hlo)
+    except Exception as e:  # pragma: no cover
+        record["collectives_error"] = str(e)
+
+    # Per-layer probes: XLA cost analysis counts scan bodies once, so the
+    # roofline reconstructs totals as main + (repeats-1) * probe per stage.
+    record["probes"] = {}
+    try:
+        probes = build_unit_probes(cfg, shape, mesh=mesh)
+        for key, (bundle, repeats) in probes.items():
+            with mesh:
+                pc = bundle.fn.lower(*bundle.arg_specs).compile()
+            cost = pc.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            try:
+                pmem = pc.memory_analysis()
+                probe_mem = int(getattr(pmem, "temp_size_in_bytes", 0))
+            except Exception:
+                probe_mem = -1
+            record["probes"][key] = {
+                "repeats": repeats,
+                "flops": cost.get("flops", 0.0),
+                "bytes_accessed": cost.get("bytes accessed", 0.0),
+                "collectives": collective_bytes(pc.as_text()),
+                "temp_bytes": probe_mem,
+            }
+    except Exception as e:  # pragma: no cover
+        record["probe_error"] = f"{type(e).__name__}: {e}"
+
+    _write(out_dir, mesh_name, arch_id, shape_name, record)
+    if verbose:
+        ma = record.get("memory_analysis", {})
+        # donated outputs alias argument space: count live bytes once
+        mem_gb = (ma.get("argument_size_in_bytes", 0)
+                  + ma.get("temp_size_in_bytes", 0)
+                  + ma.get("output_size_in_bytes", 0)
+                  - ma.get("alias_size_in_bytes", 0)) / 2 ** 30
+        coll = sum(v["bytes"] for v in record.get("collectives", {}).values())
+        print(f"[dryrun] {mesh_name} {arch_id} {shape_name}: "
+              f"compile={t_compile:.1f}s "
+              f"flops/dev={record.get('cost_analysis', {}).get('flops', 0):.3g} "
+              f"mem/dev={mem_gb:.2f}GiB coll/dev={coll/2**30:.3f}GiB",
+              flush=True)
+    return record
+
+
+def _write(out_dir: Path, mesh_name: str, arch: str, shape: str,
+           record: dict) -> None:
+    d = out_dir / mesh_name
+    d.mkdir(parents=True, exist_ok=True)
+    with open(d / f"{arch}__{shape}.json", "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), help="single arch")
+    ap.add_argument("--shape", choices=list(SHAPE_ORDER), help="single shape")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh (default 16x16)")
+    ap.add_argument("--out", default="artifacts/dryrun", type=Path)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in sorted(ARCHS):
+            for shape in SHAPE_ORDER:
+                cells.append((arch, shape))
+    elif args.arch and args.shape:
+        cells.append((args.arch, args.shape))
+    elif args.arch:
+        cells = [(args.arch, s) for s in SHAPE_ORDER]
+    else:
+        ap.error("pass --all or --arch [--shape]")
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    failures = 0
+    for arch, shape in cells:
+        path = args.out / mesh_name / f"{arch}__{shape}.json"
+        if args.skip_existing and path.exists():
+            st = json.loads(path.read_text()).get("status")
+            if st in ("ok", "skipped"):
+                print(f"[dryrun] skip existing {arch} {shape} ({st})",
+                      flush=True)
+                continue
+        try:
+            run_cell(arch, shape, args.multi_pod, args.out)
+        except Exception:
+            failures += 1
+            print(f"[dryrun] FAILED {arch} {shape}", flush=True)
+            traceback.print_exc()
+            _write(args.out, mesh_name, arch, shape, {
+                "arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "failed", "error": traceback.format_exc(),
+            })
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

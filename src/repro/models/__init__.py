@@ -1,0 +1,1 @@
+"""Model zoo: composable JAX modules for all assigned architectures."""

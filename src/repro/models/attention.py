@@ -1,0 +1,147 @@
+"""Attention blocks: GQA (full / sliding-window / non-causal) and cross
+attention, with train/prefill/decode entry points.
+
+Weights are stored head-major (``[d_model, n_heads, head_dim]``) so head or
+head_dim axes can be sharded directly by the sharding rules.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .layers import DEFAULT_COMPUTE_DTYPE, apply_rope, cast
+
+
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             bias: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(n_heads * head_dim)
+    p = {
+        "wq": jax.random.normal(ks[0], (d_model, n_heads, head_dim)) * s_in,
+        "wk": jax.random.normal(ks[1], (d_model, n_kv, head_dim)) * s_in,
+        "wv": jax.random.normal(ks[2], (d_model, n_kv, head_dim)) * s_in,
+        "wo": jax.random.normal(ks[3], (n_heads, head_dim, d_model)) * s_out,
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim))
+        p["bk"] = jnp.zeros((n_kv, head_dim))
+        p["bv"] = jnp.zeros((n_kv, head_dim))
+        p["bo"] = jnp.zeros((d_model,))
+    return p
+
+
+def _qkv(p: Dict, x: jnp.ndarray, dtype) -> Tuple:
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"], dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"], dtype))
+    if "bq" in p:
+        q = q + cast(p["bq"], dtype)
+        k = k + cast(p["bk"], dtype)
+        v = v + cast(p["bv"], dtype)
+    return q, k, v
+
+
+def _out(p: Dict, o: jnp.ndarray, dtype) -> jnp.ndarray:
+    y = jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"], dtype))
+    if "bo" in p:
+        y = y + cast(p["bo"], dtype)
+    return y
+
+
+def gqa_apply(
+    p: Dict,
+    x: jnp.ndarray,                    # [B, S, D]
+    *,
+    rope_theta: Optional[float],
+    mask_kind: str = "causal",         # causal|window|none
+    window: int = 0,
+    positions: Optional[jnp.ndarray] = None,
+    backend: str = "xla",
+    shard=None,
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence attention.  Returns (out [B,S,D], cache entries)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, dtype)
+    if rope_theta is not None:
+        pos = positions if positions is not None else jnp.arange(S)
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    if shard is not None:
+        k = shard.replicate_seq(k)
+        v = shard.replicate_seq(v)
+    o = ops.flash_attention(q, k, v, mask_kind=mask_kind, window=window,
+                            backend=backend)
+    return _out(p, o, dtype), {"k": k, "v": v}
+
+
+def gqa_decode(
+    p: Dict,
+    x: jnp.ndarray,                    # [B, D] one token
+    cache: Dict,                       # {"k": [B,S,KV,hd], "v": ...}
+    length: jnp.ndarray,               # [B] current cache fill
+    *,
+    rope_theta: Optional[float],
+    window: int = 0,
+    backend: str = "xla",
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step: append this token's K/V at ``length`` and attend."""
+    B, D = x.shape
+    q, k, v = _qkv(p, x[:, None, :], dtype)           # [B,1,H,hd]
+    if rope_theta is not None:
+        pos = length[:, None]                          # [B,1]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    S = cache["k"].shape[1]
+    if window and window < S:
+        slot = (length % window)[:, None]
+    else:
+        slot = length[:, None]
+    bidx = jnp.arange(B)[:, None]
+    k_cache = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
+    eff_len = jnp.minimum(length + 1,
+                          window if window and window < S else S)
+    o = ops.decode_attention(q[:, 0], k_cache, v_cache, eff_len,
+                             backend=backend)
+    y = _out(p, o[:, None, :, :], dtype)[:, 0]
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ----------------------------------------------------------------- cross
+def cross_init(key, d_model: int, n_heads: int, n_kv: int,
+               head_dim: int) -> Dict:
+    return gqa_init(key, d_model, n_heads, n_kv, head_dim, bias=True)
+
+
+def cross_apply(
+    p: Dict,
+    x: jnp.ndarray,                    # [B, Sq, D] decoder states
+    enc_kv: Dict,                      # {"k": [B,Se,KV,hd], "v": ...}
+    *,
+    backend: str = "xla",
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> jnp.ndarray:
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], dtype))
+    if "bq" in p:
+        q = q + cast(p["bq"], dtype)
+    o = ops.flash_attention(q, enc_kv["k"], enc_kv["v"], mask_kind="none",
+                            backend=backend)
+    return _out(p, o, dtype)
+
+
+def cross_kv(p: Dict, enc_out: jnp.ndarray, dtype=DEFAULT_COMPUTE_DTYPE) -> Dict:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, cast(p["wk"], dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, cast(p["wv"], dtype))
+    if "bk" in p:
+        k = k + cast(p["bk"], dtype)
+        v = v + cast(p["bv"], dtype)
+    return {"k": k, "v": v}

@@ -1,0 +1,157 @@
+"""Mamba-2 block: per-component projections -> causal conv1d -> SSD mixer ->
+gated RMSNorm -> out-proj.  The SSD scan itself lives in repro.kernels
+(chunked XLA / Pallas / sequential reference).
+
+The x/B/C/dt/gate projections are SEPARATE weights (the reference
+implementation fuses them into one in_proj): slicing a fused, model-sharded
+projection output at non-shard-aligned offsets forces SPMD to replicate the
+activations, which measured at ~80 GiB/device of extra temp on the
+mamba2-2.7b train_4k cell (EXPERIMENTS.md §Perf).  Separate projections keep
+the SSD head axis cleanly sharded end to end.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.kernels import ops
+
+from .layers import DEFAULT_COMPUTE_DTYPE, apply_norm, cast, norm_init
+
+
+def _heads(s: SSMConfig) -> int:
+    return s.d_inner // s.head_dim
+
+
+def mamba2_init(key, d_model: int, s: SSMConfig) -> Dict:
+    heads = _heads(s)
+    gn = s.n_groups * s.state_dim
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(d_model)
+    return {
+        "w_gate": jax.random.normal(ks[0], (d_model, s.d_inner)) * sc,
+        "w_x": jax.random.normal(ks[1], (d_model, s.d_inner)) * sc,
+        "w_b": jax.random.normal(ks[2], (d_model, gn)) * sc,
+        "w_c": jax.random.normal(ks[3], (d_model, gn)) * sc,
+        "w_dt": jax.random.normal(ks[4], (d_model, heads)) * sc,
+        "conv_x_w": jax.random.normal(ks[5], (s.conv_width, s.d_inner)) * 0.2,
+        "conv_x_b": jnp.zeros((s.d_inner,)),
+        "conv_b_w": jax.random.normal(ks[6], (s.conv_width, gn)) * 0.2,
+        "conv_b_b": jnp.zeros((gn,)),
+        "conv_c_w": jax.random.normal(ks[7], (s.conv_width, gn)) * 0.2,
+        "conv_c_b": jnp.zeros((gn,)),
+        "dt_bias": jnp.zeros((heads,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)),
+        "d_skip": jnp.ones((heads,)),
+        "gate_norm": norm_init(s.d_inner),
+        "out_proj": jax.random.normal(
+            jax.random.fold_in(key, 99), (s.d_inner, d_model))
+        / math.sqrt(s.d_inner),
+    }
+
+
+def _causal_conv(w, b, x, prev: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over [B, S, C]; ``prev`` is [B, W-1, C]."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return jax.nn.silu(out + b[None, None, :]), xp[:, -(W - 1):, :]
+
+
+def mamba2_apply(
+    p: Dict,
+    x: jnp.ndarray,                     # [B, S, D]
+    s: SSMConfig,
+    d_model: int,
+    *,
+    backend: str = "xla",
+    initial_state: Optional[Dict] = None,
+    shard=None,
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence mamba2 mixer.  Returns (out, state dict)."""
+    B, S, _ = x.shape
+    heads = _heads(s)
+    wcast = ((lambda w: shard.weight_for_batch(cast(w, dtype), B))
+             if shard is not None else (lambda w: cast(w, dtype)))
+    gate = x @ wcast(p["w_gate"])
+    xs_r = x @ wcast(p["w_x"])
+    if shard is not None:
+        xs_r = shard.channels(xs_r)        # d_inner (=heads) over model
+    b_r = x @ wcast(p["w_b"])
+    c_r = x @ wcast(p["w_c"])
+    dt_r = x @ wcast(p["w_dt"])
+
+    prev = initial_state if initial_state else {}
+    xs_c, conv_x = _causal_conv(wcast(p["conv_x_w"]), wcast(p["conv_x_b"]),
+                                xs_r, prev.get("conv_x"))
+    b_c, conv_b = _causal_conv(wcast(p["conv_b_w"]), wcast(p["conv_b_b"]),
+                               b_r, prev.get("conv_b"))
+    c_c, conv_c = _causal_conv(wcast(p["conv_c_w"]), wcast(p["conv_c_b"]),
+                               c_r, prev.get("conv_c"))
+
+    xs = xs_c.reshape(B, S, heads, s.head_dim)
+    Bmat = b_c.reshape(B, S, s.n_groups, s.state_dim)
+    Cmat = c_c.reshape(B, S, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    h0 = prev.get("ssm")
+    y, hT = ops.ssd(xs, dt, A, Bmat, Cmat, chunk=s.chunk,
+                    initial_state=h0, backend=backend)
+    y = y + xs * cast(p["d_skip"], dtype)[None, None, :, None]
+    y = y.reshape(B, S, s.d_inner)
+    y = apply_norm(p["gate_norm"], y) * jax.nn.silu(gate)
+    out = y @ wcast(p["out_proj"])
+    return out, {"ssm": hT, "conv_x": conv_x, "conv_b": conv_b,
+                 "conv_c": conv_c}
+
+
+def mamba2_decode(
+    p: Dict,
+    x: jnp.ndarray,                     # [B, D]
+    state: Dict,
+    s: SSMConfig,
+    d_model: int,
+    *,
+    dtype=DEFAULT_COMPUTE_DTYPE,
+) -> Tuple[jnp.ndarray, Dict]:
+    B, _ = x.shape
+    heads = _heads(s)
+    gate = x @ cast(p["w_gate"], dtype)
+    xs_r = (x @ cast(p["w_x"], dtype))[:, None, :]
+    b_r = (x @ cast(p["w_b"], dtype))[:, None, :]
+    c_r = (x @ cast(p["w_c"], dtype))[:, None, :]
+    dt_r = x @ cast(p["w_dt"], dtype)
+
+    def conv_step(wk, bk, u, hist):
+        h = jnp.concatenate([hist, u], axis=1)                  # [B,W,C]
+        out = jnp.einsum("bwc,wc->bc", h, cast(wk, dtype)) + cast(bk, dtype)
+        return jax.nn.silu(out), h[:, 1:]
+
+    xs_c, conv_x = conv_step(p["conv_x_w"], p["conv_x_b"], xs_r,
+                             state["conv_x"])
+    b_c, conv_b = conv_step(p["conv_b_w"], p["conv_b_b"], b_r,
+                            state["conv_b"])
+    c_c, conv_c = conv_step(p["conv_c_w"], p["conv_c_b"], c_r,
+                            state["conv_c"])
+
+    xs = xs_c.reshape(B, heads, s.head_dim)
+    Bvec = b_c.reshape(B, s.n_groups, s.state_dim)
+    Cvec = c_c.reshape(B, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y, new_ssm = ops.ssd_decode_step(xs, dt, A, Bvec, Cvec, state["ssm"])
+    y = y + xs * cast(p["d_skip"], dtype)[None, :, None]
+    y = y.reshape(B, s.d_inner)
+    y = apply_norm(p["gate_norm"], y) * jax.nn.silu(gate)
+    out = y @ cast(p["out_proj"], dtype)
+    return out, {"ssm": new_ssm, "conv_x": conv_x, "conv_b": conv_b,
+                 "conv_c": conv_c}

@@ -1,0 +1,1 @@
+from .annotate import NULL_SHARDER, NullSharder, Sharder, profile_for

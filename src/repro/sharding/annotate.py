@@ -1,0 +1,163 @@
+"""Activation sharding annotations (with_sharding_constraint helpers).
+
+Two profiles (see DESIGN.md "Distribution design"):
+
+* ``cp``  — context parallelism: activations [B, S, D] sharded batch over the
+  data axes and sequence over ``model``; attention replicates (all-gathers)
+  the small GQA/MLA KV across ``model`` and computes with sequence-sharded
+  queries.  Used by every attention-family architecture (works for any head
+  count).
+* ``tp``  — Megatron tensor parallelism over channels/heads: activations
+  sharded batch-only; mixer-internal tensors shard their channel/head axis
+  over ``model``.  Used by the recurrent architectures (mamba2,
+  recurrentgemma) whose sequential scans must keep the sequence axis local.
+
+All constraints degrade gracefully: any axis whose size does not divide the
+mesh axis is left unsharded, so the same model code runs on 1 CPU device
+(NULL_SHARDER) and on the 512-way production mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class NullSharder:
+    """No-op sharder for single-device runs and unit tests."""
+
+    profile = "null"
+
+    def activations(self, x):
+        return x
+
+    def logits(self, x):
+        return x
+
+    def replicate_seq(self, kv):
+        return kv
+
+    def channels(self, x):
+        return x
+
+    def weight_for_batch(self, w, batch_size):
+        return w
+
+    def decode_activations(self, x):
+        return x
+
+    def constraint(self, x, *spec):
+        return x
+
+
+NULL_SHARDER = NullSharder()
+
+
+class Sharder:
+    def __init__(self, mesh: Mesh, profile: str,
+                 batch_axes: Tuple[str, ...] = ("data",),
+                 model_axis: str = "model", full_dp: bool = False):
+        assert profile in ("cp", "tp"), profile
+        self.mesh = mesh
+        self.profile = profile
+        self.batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+        self.model_axis = model_axis if model_axis in mesh.axis_names else None
+        # cp-profile archs without MoE may fall into pure DP+FSDP when the
+        # global batch divides the whole mesh: attention then runs fully
+        # local (no per-layer KV gather), which beat CP by 2-6x on the
+        # collective roofline term for the train cells (EXPERIMENTS §Perf).
+        self.full_dp = full_dp
+
+    # ------------------------------------------------------------- helpers
+    def _axis_size(self, axes) -> int:
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _batch_spec(self, b: int):
+        return self.batch_axes if (self.batch_axes
+                                   and b % self._axis_size(self.batch_axes) == 0) else None
+
+    def _model_spec(self, dim: int):
+        if self.model_axis and dim % self._axis_size(self.model_axis) == 0:
+            return self.model_axis
+        return None
+
+    def _plan(self, b: int):
+        """(batch axes, model_axis_free) for a tensor with batch size ``b``.
+
+        tp profile: recurrent scans keep the sequence local, so when the
+        global batch divides the WHOLE mesh we shard batch over
+        (pod, data, model) — per-layer activation checkpoints then scale as
+        B/n_devices (pure FSDP+DP), which measured ~40 GiB/device cheaper
+        than channel-TP on the mamba2/recurrentgemma train cells
+        (EXPERIMENTS.md §Perf).  Otherwise batch uses the data axes and the
+        model axis is free for channel sharding.
+        """
+        if (self.profile == "tp" or self.full_dp) and self.model_axis:
+            full = self.batch_axes + (self.model_axis,)
+            if b % self._axis_size(full) == 0:
+                return full, False
+        return self._batch_spec(b), True
+
+    def constraint(self, x, *spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    # --------------------------------------------------------------- hooks
+    def activations(self, x):
+        """[B, S, D] between layers."""
+        b_spec, model_free = self._plan(x.shape[0])
+        s_spec = (self._model_spec(x.shape[1])
+                  if (self.profile == "cp" and model_free) else None)
+        return self.constraint(x, b_spec, s_spec, None)
+
+    def logits(self, x):
+        return self.activations(x)
+
+    def replicate_seq(self, kv):
+        """KV tensors gathered across ``model`` before streaming attention
+        (cp profile).  Under the tp profile the sequence is already local:
+        keep whatever batch plan is active — re-constraining to data-only
+        batch would replicate attention across the model axis (measured
+        ~13 GiB/device of gathers per local-attention layer on
+        recurrentgemma — EXPERIMENTS.md §Perf)."""
+        b_spec, model_free = self._plan(kv.shape[0])
+        if self.profile == "cp" and model_free:
+            b_spec = self._batch_spec(kv.shape[0])
+        return self.constraint(kv, b_spec, *([None] * (kv.ndim - 1)))
+
+    def channels(self, x):
+        """[B, S, C] with the channel axis model-sharded (recurrent blocks);
+        when the batch already occupies the model axis, C stays local."""
+        b_spec, model_free = self._plan(x.shape[0])
+        c_spec = self._model_spec(x.shape[2]) if model_free else None
+        return self.constraint(x, b_spec, None, c_spec)
+
+    def weight_for_batch(self, w, batch_size: int):
+        """Under the full-mesh batch plan, force the (small) weight to be
+        gathered instead of letting SPMD re-gather the activations per op —
+        measured ~15 GiB/device of activation all-gather per scanned unit
+        on recurrentgemma otherwise (EXPERIMENTS.md §Perf)."""
+        if self.profile != "tp":
+            return w
+        _, model_free = self._plan(batch_size)
+        if model_free:
+            return w
+        return self.constraint(w, *([None] * w.ndim))
+
+    def decode_activations(self, x):
+        """[B, D] single-token activations."""
+        b_spec = self._batch_spec(x.shape[0])
+        return self.constraint(x, b_spec, None)
+
+
+def profile_for(cfg) -> str:
+    """Sharding profile for an architecture (see module docstring)."""
+    return "tp" if (cfg.ssm is not None or cfg.rglru is not None) else "cp"

@@ -1,0 +1,198 @@
+"""Parameter / optimizer / batch / cache PartitionSpec rules.
+
+Role-aware 2D sharding: for every weight the "wide" structural dim (d_ff,
+heads, experts, vocab, d_inner, lru width) shards over ``model`` and the
+d_model-ish dim shards over ``data`` (FSDP).  Any dim that does not divide
+its mesh axis stays unsharded — the rules are total, so every architecture
+lowers on the same mesh.  Stacked-layer leaves get a leading ``None`` for
+the repeats axis.
+
+These rules are the *baseline*; EXPERIMENTS.md §Perf iterates on them for
+the three hillclimb cells.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _div(n: int, mesh: Mesh, axis) -> Optional[str]:
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if n % mesh.shape[axis] == 0 else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+#: (regex on path, spec builder taking (shape, mesh) -> tuple of axis names)
+_RULES = [
+    # embeddings / head
+    (r"embed/table$", lambda s, m: (_div(s[0], m, "model"),
+                                    _div(s[1], m, "data"))),
+    (r"lm_head/w$", lambda s, m: (_div(s[0], m, "data"),
+                                  _div(s[1], m, "model"))),
+    # MoE experts: E over model (EP), d_model over data
+    (r"ffn/(gate_w|up_w)$", lambda s, m: (_div(s[0], m, "model"),
+                                          _div(s[1], m, "data"), None)),
+    (r"ffn/down_w$", lambda s, m: (_div(s[0], m, "model"), None,
+                                   _div(s[2], m, "data"))),
+    (r"ffn/router$", lambda s, m: (_div(s[0], m, "data"), None)),
+    # dense FFN (and MoE shared experts)
+    (r"(ffn|shared)(/shared)?/(gate|up)/w$",
+     lambda s, m: (_div(s[0], m, "data"), _div(s[1], m, "model"))),
+    (r"(ffn|shared)(/shared)?/down/w$",
+     lambda s, m: (_div(s[0], m, "model"), _div(s[1], m, "data"))),
+    # attention projections [D, H, hd] / [H, hd, D]: shard heads over model
+    # when divisible, else fall back to the head_dim axis (128 % 16 == 0
+    # across the zoo) so the weights still shard 256-way at rest
+    (r"(mixer|cross)/w[qkv]$",
+     lambda s, m: (_div(s[0], m, "data"), _div(s[1], m, "model"),
+                   None if s[1] % m.shape.get("model", 1) == 0
+                   else _div(s[2], m, "model"))),
+    (r"(mixer|cross)/wo$",
+     lambda s, m: (_div(s[0], m, "model"),
+                   None if s[0] % m.shape.get("model", 1) == 0
+                   else _div(s[1], m, "model"),
+                   _div(s[2], m, "data"))),
+    # MLA
+    (r"mixer/wdq$", lambda s, m: (_div(s[0], m, "data"), None)),
+    (r"mixer/wuq$", lambda s, m: (None, _div(s[1], m, "model"), None)),
+    (r"mixer/wdkv$", lambda s, m: (_div(s[0], m, "data"), None)),
+    (r"mixer/wkr$", lambda s, m: (_div(s[0], m, "data"), None)),
+    (r"mixer/w(uk|uv)$", lambda s, m: (None, _div(s[1], m, "model"), None)),
+    # mamba2 (separate per-component projections; B/C/dt stay replicated-out)
+    (r"mixer/(w_gate|w_x|w_dt)$", lambda s, m: (_div(s[0], m, "data"),
+                                                _div(s[1], m, "model"))),
+    (r"mixer/w_[bc]$", lambda s, m: (_div(s[0], m, "data"), None)),
+    (r"mixer/out_proj$", lambda s, m: (_div(s[0], m, "model"),
+                                       _div(s[1], m, "data"))),
+    (r"mixer/conv_x_w$", lambda s, m: (None, _div(s[1], m, "model"))),
+    (r"mixer/conv_x_b$", lambda s, m: (_div(s[0], m, "model"),)),
+    (r"mixer/conv_[bc]_[wb]$", lambda s, m: tuple(None for _ in s)),
+    (r"mixer/(dt_bias|a_log|d_skip)$",
+     lambda s, m: (_div(s[0], m, "model"),)),
+    (r"mixer/gate_norm/scale$", lambda s, m: (_div(s[0], m, "model"),)),
+    # RG-LRU
+    (r"mixer/w[xy]$", lambda s, m: (_div(s[0], m, "data"),
+                                    _div(s[1], m, "model"))),
+    (r"mixer/out$", lambda s, m: (_div(s[0], m, "model"),
+                                  _div(s[1], m, "data"))),
+    (r"mixer/gate_[ai]$", lambda s, m: (_div(s[0], m, "model"), None, None)),
+    (r"mixer/(gate_[ai]_b|a_param)$",
+     lambda s, m: (_div(s[0], m, "model"),)),
+]
+
+_COMPILED = [(re.compile(pat), fn) for pat, fn in _RULES]
+
+
+def param_spec(path, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    s = _path_str(path)
+    stacked = 0
+    if re.search(r"(stage\d+|encoder/layers)", s):
+        stacked = 1
+    core = shape[stacked:]
+    for pat, fn in _COMPILED:
+        if pat.search(s):
+            spec = tuple(fn(core, mesh))
+            if len(spec) < len(core):           # rank-robust fallback
+                spec = spec + (None,) * (len(core) - len(spec))
+            return P(*((None,) * stacked + spec[: len(core)]))
+    return P(*((None,) * len(shape)))           # replicate (norms, biases)
+
+
+def param_shardings(param_shapes, mesh: Mesh):
+    """Map a pytree of ShapeDtypeStructs to NamedShardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf.shape, mesh)),
+        param_shapes)
+
+
+def unit_shardings(param_shardings_tree, stage_key: str):
+    """Shardings for one repeat of a stage's unit: take the stage subtree and
+    drop the leading (stacked-layers) spec entry of every leaf."""
+    sub = param_shardings_tree[stage_key]
+
+    def strip(ns: NamedSharding) -> NamedSharding:
+        return NamedSharding(ns.mesh, P(*ns.spec[1:]))
+
+    return jax.tree.map(strip, sub)
+
+
+def unit_struct(param_struct_tree, stage_key: str):
+    """ShapeDtypeStructs for one repeat (drop the stacked axis)."""
+    sub = param_struct_tree[stage_key]
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), sub)
+
+
+# ------------------------------------------------------------------ batches
+def batch_shardings(batch_spec_tree, mesh: Mesh, cfg: ArchConfig,
+                    profile: str):
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    full_axes = batch_axes + (("model",) if "model" in mesh.axis_names
+                              else ())
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        rest = [None] * (len(shape) - 1)
+        full_ok = profile == "tp" or cfg.moe is None
+        if full_ok and shape[0] % _size(mesh, full_axes) == 0:
+            # recurrent-arch training: batch over the whole mesh
+            return NamedSharding(mesh, P(full_axes, *rest))
+        b = batch_axes if (batch_axes and shape[0] % _size(mesh, batch_axes) == 0) else None
+        if profile == "cp" and len(shape) >= 2:
+            rest[0] = _div(shape[1], mesh, "model")
+        return NamedSharding(mesh, P(b, *rest))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_spec_tree)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ------------------------------------------------------------------- caches
+def cache_shardings(cache_shapes, mesh: Mesh, cfg: ArchConfig):
+    """Decode-cache shardings: batch over data axes; the long axis (cache
+    sequence, SSD heads, RG-LRU channels) over ``model``."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        # leading stacked-layers axis, then batch
+        b = batch_axes if (len(shape) > 1 and
+                           shape[1] % _size(mesh, batch_axes) == 0) else None
+        dims = [None, b] + [None] * (len(shape) - 2)
+        if re.search(r"(^|/)(k|v|c_kv|k_rope)$", s) and len(shape) >= 3:
+            dims[2] = _div(shape[2], mesh, "model")     # cache sequence
+        elif s.endswith("ssm") and len(shape) == 5:
+            dims[2] = _div(shape[2], mesh, "model")     # SSD heads
+        elif s.endswith("/h") and len(shape) == 3:
+            dims[2] = _div(shape[2], mesh, "model")     # RG-LRU channels
+        elif (s.endswith("conv") or s.endswith("conv_x")) and len(shape) == 4:
+            dims[3] = _div(shape[3], mesh, "model")     # conv channels
+        # cross-attention caches stay replicated on Se (small)
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

@@ -1,0 +1,58 @@
+"""Tests for STP / ANTT / StrictF metrics."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.metrics import evaluate, geomean, summarize, WorkloadMetrics
+
+
+def test_perfect_sharing():
+    # Both programs run as if alone: STP = n, ANTT = 1, fairness = 1.
+    m = evaluate({"a": 10.0, "b": 20.0}, {"a": 10.0, "b": 20.0})
+    assert m.stp == pytest.approx(2.0)
+    assert m.antt == pytest.approx(1.0)
+    assert m.fairness == pytest.approx(1.0)
+
+
+def test_full_serialization():
+    # a then b, equal lengths: slowdowns 1 and 2.
+    m = evaluate({"a": 10.0, "b": 20.0}, {"a": 10.0, "b": 10.0})
+    assert m.stp == pytest.approx(1.5)
+    assert m.antt == pytest.approx(1.5)
+    assert m.fairness == pytest.approx(0.5)
+
+
+def test_geomean():
+    assert geomean([1.0, 4.0]) == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        geomean([1.0, -1.0])
+    assert math.isnan(geomean([]))
+
+
+def test_summarize_is_geomean_per_metric():
+    a = WorkloadMetrics(1.0, 2.0, 0.25)
+    b = WorkloadMetrics(4.0, 8.0, 1.0)
+    s = summarize([a, b])
+    assert s.stp == pytest.approx(2.0)
+    assert s.antt == pytest.approx(4.0)
+    assert s.fairness == pytest.approx(0.5)
+
+
+@given(
+    solo=st.lists(st.floats(min_value=1.0, max_value=1e6), min_size=2,
+                  max_size=6),
+    factors=st.lists(st.floats(min_value=1.0, max_value=100.0), min_size=2,
+                     max_size=6),
+)
+def test_metric_bounds(solo, factors):
+    n = min(len(solo), len(factors))
+    solo = solo[:n]
+    turnaround = {f"k{i}": solo[i] * factors[i] for i in range(n)}
+    solo_map = {f"k{i}": solo[i] for i in range(n)}
+    m = evaluate(turnaround, solo_map)
+    # STP in (0, n]; ANTT >= 1 (slowdowns >= 1); fairness in (0, 1].
+    assert 0.0 < m.stp <= n + 1e-9
+    assert m.antt >= 1.0 - 1e-9
+    assert 0.0 < m.fairness <= 1.0 + 1e-9

@@ -1,0 +1,165 @@
+"""Unit + property tests for the Staircase model and Simple Slicing predictor."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predictor import (
+    SimpleSlicingPredictor,
+    staircase_blocks_in,
+    staircase_runtime,
+)
+
+
+# ---------------------------------------------------------------- staircase
+def test_staircase_eq1_matches_figure2():
+    # Figure 2: N = 3R blocks, residency R=4, each block t => T = 3t.
+    assert staircase_runtime(12, 4, 10.0) == 30.0
+
+
+def test_staircase_partial_wave_rounds_up():
+    assert staircase_runtime(13, 4, 10.0) == 40.0
+    assert staircase_runtime(1, 8, 7.0) == 7.0
+
+
+def test_staircase_zero_blocks():
+    assert staircase_runtime(0, 4, 10.0) == 0.0
+
+
+@given(
+    n=st.integers(min_value=1, max_value=10_000),
+    r=st.integers(min_value=1, max_value=8),
+    t=st.floats(min_value=1e-3, max_value=1e7, allow_nan=False),
+)
+def test_staircase_properties(n, r, t):
+    total = staircase_runtime(n, r, t)
+    # exactly ceil(N/R) waves
+    assert total == pytest.approx(math.ceil(n / r) * t)
+    # monotone in N, antitone in R
+    assert staircase_runtime(n + r, r, t) >= total
+    assert staircase_runtime(n, r + 1, t) <= total
+
+
+@given(
+    n=st.integers(min_value=0, max_value=10_000),
+    r=st.integers(min_value=1, max_value=8),
+    t=st.floats(min_value=1e-2, max_value=1e6, allow_nan=False),
+)
+def test_staircase_inverse_consistent(n, r, t):
+    # blocks_in is (approximately) inverse of the linear runtime model
+    time = n * t / r
+    blocks = staircase_blocks_in(time, r, t)
+    assert abs(blocks - n) <= 1
+
+
+# ---------------------------------------------------- SS predictor (Alg. 1)
+def drive_uniform_kernel(n_sm=1, total_blocks=12, residency=4, t=100.0):
+    """Run a perfectly uniform staircase execution through the predictor."""
+    p = SimpleSlicingPredictor(n_sm)
+    p.on_launch("k", total_blocks * n_sm, residency)
+    events = []
+    for sm in range(n_sm):
+        # wave-by-wave execution
+        now, done = 0.0, 0
+        while done < total_blocks:
+            wave = min(residency, total_blocks - done)
+            for slot in range(wave):
+                p.on_block_start("k", sm, slot, now)
+            now += t
+            for slot in range(wave):
+                pred = p.on_block_end("k", sm, slot, now)
+                events.append((sm, done + slot + 1, now, pred))
+            done += wave
+    return p, events
+
+
+def test_predictor_exact_on_uniform_staircase():
+    total, residency, t = 12, 4, 100.0
+    p, events = drive_uniform_kernel(1, total, residency, t)
+    true_runtime = staircase_runtime(total, residency, t)
+    # After the FIRST block ends, Eq. 2 should predict:
+    # active(=t) + (total - 1)/R * t
+    first_pred = events[0][3]
+    assert first_pred == pytest.approx(t + (total - 1) / residency * t)
+    # Within 1 wave of truth (Eq. 2 is the non-step variant of Eq. 1)
+    assert abs(first_pred - true_runtime) <= t
+    # Final prediction equals actual runtime exactly (all blocks done).
+    last_pred = events[-1][3]
+    assert last_pred == pytest.approx(true_runtime)
+
+
+def test_predictor_resamples_t_on_reslice():
+    p = SimpleSlicingPredictor(1)
+    p.on_launch("k", 8, 2)
+    p.on_block_start("k", 0, 0, 0.0)
+    p.on_block_end("k", 0, 0, 50.0)        # t sampled = 50
+    assert p.state("k", 0).t == 50.0
+    # without reslice, later (slower) blocks do not change t
+    p.on_block_start("k", 0, 0, 50.0)
+    p.on_block_end("k", 0, 0, 150.0)
+    assert p.state("k", 0).t == 50.0
+    # residency change starts a new slice -> next block resamples t
+    p.on_residency_change("k", 0, 1)
+    p.on_block_start("k", 0, 0, 150.0)
+    p.on_block_end("k", 0, 0, 250.0)
+    assert p.state("k", 0).t == 100.0
+
+
+def test_kernel_launch_reslices_other_kernels():
+    p = SimpleSlicingPredictor(1)
+    p.on_launch("a", 8, 2)
+    p.on_block_start("a", 0, 0, 0.0)
+    p.on_block_end("a", 0, 0, 10.0)
+    assert not p.state("a", 0).reslice
+    p.on_launch("b", 8, 2)
+    assert p.state("a", 0).reslice          # Algorithm 1 ONLAUNCH side effect
+
+
+def test_kernel_end_reslices_running_kernels():
+    p = SimpleSlicingPredictor(1)
+    p.on_launch("a", 8, 2)
+    p.on_launch("b", 8, 2)
+    p.on_block_start("a", 0, 0, 0.0)
+    p.on_block_end("a", 0, 0, 10.0)
+    assert not p.state("a", 0).reslice
+    p.on_kernel_end("b")
+    assert p.state("a", 0).reslice
+
+
+def test_broadcast_t_fills_other_sms():
+    p = SimpleSlicingPredictor(4)
+    p.on_launch("k", 40, 4)
+    p.on_block_start("k", 0, 0, 0.0)
+    p.on_block_end("k", 0, 0, 25.0)
+    p.broadcast_t("k", 25.0, from_sm=0)
+    for sm in range(4):
+        assert p.state("k", sm).t == 25.0
+        assert p.remaining("k", sm) is not None
+
+
+def test_active_cycles_excludes_idle_gaps():
+    p = SimpleSlicingPredictor(1)
+    p.on_launch("k", 4, 1)
+    p.on_block_start("k", 0, 0, 0.0)
+    p.on_block_end("k", 0, 0, 10.0)
+    # idle gap [10, 50)
+    p.on_block_start("k", 0, 0, 50.0)
+    p.on_block_end("k", 0, 0, 60.0)
+    assert p.state("k", 0).active_cycles == pytest.approx(20.0)
+
+
+@settings(max_examples=50)
+@given(
+    total=st.integers(min_value=2, max_value=64),
+    residency=st.integers(min_value=1, max_value=8),
+    t=st.floats(min_value=1.0, max_value=1e5, allow_nan=False),
+)
+def test_predictor_exact_for_any_uniform_kernel(total, residency, t):
+    """Property: on uniform staircase executions, the first prediction is
+    within one wave (one t) of the true runtime, and never negative."""
+    p, events = drive_uniform_kernel(1, total, residency, t)
+    truth = staircase_runtime(total, residency, t)
+    first_pred = events[0][3]
+    assert first_pred is not None and first_pred >= 0
+    assert abs(first_pred - truth) <= t + 1e-6 * truth

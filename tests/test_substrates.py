@@ -1,0 +1,169 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, executor
+fault tolerance."""
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import ARCHS, get_arch
+from repro.configs.shapes import InputShape, SHAPES
+from repro.core.executor import ExecutorJob, LaneExecutor
+from repro.core.jobs import make_train_job
+from repro.core.policies import make_policy
+from repro.data import pipeline as data
+from repro.optim import adamw
+
+
+# ------------------------------------------------------------------- data
+def test_data_is_deterministic_and_seekable():
+    cfg = ARCHS["yi-6b"].reduced()
+    shape = InputShape("t", 32, 4, "train")
+    b1 = data.batch_for_step(cfg, shape, 7)
+    b2 = data.batch_for_step(cfg, shape, 7)
+    b3 = data.batch_for_step(cfg, shape, 8)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert b1["tokens"].shape == (4, 32)
+    assert int(b1["tokens"].max()) < cfg.vocab_size
+
+
+def test_data_shapes_for_stub_frontends():
+    whisper = ARCHS["whisper-large-v3"].reduced()
+    shape = InputShape("t", 16, 2, "train")
+    b = data.batch_for_step(whisper, shape, 0)
+    assert b["frames"].shape == (2, whisper.encoder.n_frames,
+                                 whisper.d_model)
+    pix = ARCHS["pixtral-12b"].reduced()
+    b = data.batch_for_step(pix, InputShape("t", 16, 2, "train"), 0)
+    assert b["patches"].shape == (2, pix.n_patches, pix.d_model)
+    assert b["tokens"].shape == (2, 16 - pix.n_patches)
+
+
+def test_batch_spec_matches_batch():
+    cfg = ARCHS["pixtral-12b"].reduced()
+    shape = InputShape("t", 16, 2, "train")
+    spec = data.batch_spec(cfg, shape)
+    batch = data.batch_for_step(cfg, shape, 0)
+    assert set(spec) == set(batch)
+    for k in spec:
+        assert spec[k].shape == batch[k].shape
+        assert spec[k].dtype == batch[k].dtype
+
+
+# ---------------------------------------------------------------- adamw
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                          total_steps=200, schedule="constant")
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_clips_gradients():
+    cfg = adamw.OptConfig(lr=1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params)
+    _, _, stats = adamw.update({"w": jnp.full(4, 1e6)}, state, params, cfg)
+    assert float(stats["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_lr_schedule_shapes():
+    cfg = adamw.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.schedule_lr(cfg, jnp.array(s)))
+           for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.0 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.0, abs=1e-6)
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2, async_save=False)
+        for step in (5, 10, 15):
+            ck.save(step, jax.tree.map(lambda x, s=step: x + s, tree))
+        assert ck.all_steps() == [10, 15]      # gc keeps last 2
+        step, restored, meta = ck.restore(tree)
+        assert step == 15
+        np.testing.assert_array_equal(
+            np.asarray(restored["a"], np.float32),
+            np.asarray(tree["a"] + 15, np.float32))
+        assert meta["step"] == 15
+
+
+def test_checkpoint_async_and_shape_validation():
+    tree = {"w": jnp.ones((3, 3))}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=True)
+        ck.save(1, tree)
+        ck.wait()
+        with pytest.raises(ValueError):
+            ck.restore({"w": jnp.ones((4, 4))})
+
+
+def test_checkpoint_restart_resumes_training():
+    cfg = get_arch("yi-6b").reduced()
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=False)
+        job = make_train_job(cfg, "j", blocks=6, batch=2, seq=16,
+                             max_residency=2, checkpointer=ck,
+                             checkpoint_every=2)
+        ex = LaneExecutor([job], make_policy("fifo"), n_lanes=2)
+        ex.run()
+        assert ck.latest_step() is not None
+        # resume: remaining work shrinks by the checkpointed progress
+        job2 = make_train_job(cfg, "j", blocks=6, batch=2, seq=16,
+                              max_residency=2, checkpointer=ck,
+                              resume=True)
+        assert job2.num_blocks == 6 - ck.latest_step()
+
+
+# --------------------------------------------------------------- executor
+def _quick_job(name, blocks, dur=0.001, arrival=0.0, residency=2):
+    def make_block_fn(r):
+        def block():
+            time.sleep(dur)
+        return block
+    return ExecutorJob(name=name, num_blocks=blocks, max_residency=residency,
+                       make_block_fn=make_block_fn, arrival=arrival)
+
+
+def test_executor_completes_all_jobs():
+    jobs = [_quick_job("a", 8), _quick_job("b", 4, arrival=0.001)]
+    ex = LaneExecutor(jobs, make_policy("fifo"), n_lanes=2)
+    res = ex.run()
+    assert {r.blocks for r in res.values()} == {8, 4}
+
+
+def test_executor_lane_failure_reexecutes_block():
+    jobs = [_quick_job("a", 12, dur=0.002)]
+    ex = LaneExecutor(jobs, make_policy("fifo"), n_lanes=3,
+                      fail_lane_at=(1, 0.004))
+    res = ex.run()
+    r = next(iter(res.values()))
+    assert r.blocks == 12                   # all blocks completed
+    assert ex.failures_absorbed >= 1        # at least one block was lost
+    assert ex.sms[1].failed
+
+
+def test_executor_straggler_quarantine():
+    jobs = [_quick_job("a", 40, dur=0.001, residency=4)]
+    ex = LaneExecutor(jobs, make_policy("fifo"), n_lanes=4,
+                      straggler=(2, 50.0), straggler_quarantine=2.5)
+    res = ex.run()
+    assert next(iter(res.values())).blocks == 40
+    assert ex.sms[2].failed                 # quarantined
