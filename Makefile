@@ -1,0 +1,23 @@
+PY := python
+export PYTHONPATH := src
+
+.PHONY: check test smoke golden
+
+test:
+	$(PY) -m pytest -x -q -m "not slow"
+
+# Tiny-config end-to-end smokes: the DES benchmarks that need no JAX
+# compilation, plus the async serving path (real jitted steps, reduced
+# configs).
+smoke:
+	$(PY) -m benchmarks.run fig01 fig04 table5
+	$(PY) -m repro.launch.serve --jobs yi-6b:4,minicpm3-4b:2 \
+	    --policy srtf --compare-fifo \
+	    --tokens-per-block 4 --prompt-len 8 --batch 1
+
+check: test smoke
+
+# Regenerate the golden-trace fixture (ONLY when a schedule change is
+# intended and reviewed; tests/test_golden_traces.py pins the current one).
+golden:
+	$(PY) tests/make_golden_traces.py

@@ -1,11 +1,12 @@
 """Real-JAX lane-executor policy benchmark (ours): STP/ANTT/fairness with
-actual measured JAX step computations.  Populated once repro.core.executor
-lands; skips gracefully before that."""
+actual measured JAX step computations, driven through the ``Machine``
+protocol (so policies AND predictors are pluggable).  Skips gracefully when
+the JAX substrate is unavailable."""
 
 
 def run():
     try:
         from .executor_impl import run_impl
     except ImportError:
-        return [("executor.status", "SKIPPED (executor benchmark not built yet)")]
+        return [("executor.status", "SKIPPED (JAX substrate unavailable)")]
     return run_impl()

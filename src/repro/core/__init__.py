@@ -3,31 +3,62 @@ preemptive thread-block-style scheduling for concurrent workloads.
 
 Backend-independent core:
 
-* :mod:`repro.core.predictor` — Staircase model (Eq. 1) + Simple Slicing
-  online predictor (Table 1 / Algorithm 1 / Eq. 2).
+* :mod:`repro.core.machine`   — the formal ``Machine`` protocol (the read
+  surface policies/predictors may touch) and the ``SchedulerCore`` (one
+  policy + one predictor) that drives any machine implementing it.
+* :mod:`repro.core.events`    — typed machine events (``KernelArrived`` /
+  ``BlockStarted`` / ``BlockEnded`` / ``KernelEnded``) and scheduling
+  decisions (``IssueGrant`` / ``SampleOnSM`` / ``Hold`` /
+  ``PreemptAtBoundary``).
+* :mod:`repro.core.predictor` — Staircase model (Eq. 1), the ``Predictor``
+  interface + registry, Simple Slicing (Table 1 / Algorithm 1 / Eq. 2) and
+  the EWMA baseline.
 * :mod:`repro.core.policies`  — FIFO, SJF, LJF, JIT-MPMax, SRTF,
-  SRTF/Adaptive.
+  SRTF/Adaptive, all written against the ``Machine`` protocol.
 * :mod:`repro.core.simulator` — discrete-event multi-SM GPU simulator
   (the GPGPU-Sim analogue used to reproduce the paper's evaluation).
 * :mod:`repro.core.executor`  — real-JAX lane executor: the same scheduler
   driving actual ``train_step`` / ``serve_step`` computations (TPU pod
   adaptation; see DESIGN.md Section 2).
+* :mod:`repro.core.scheduler_service` — async multi-tenant submission API
+  (``submit(job) -> handle``, late arrivals, cancellation, per-tenant
+  metrics) over the lane executor.
 * :mod:`repro.core.metrics`   — STP / ANTT / StrictF.
 """
 
+from .events import (
+    BlockEnded,
+    BlockStarted,
+    Decision,
+    Hold,
+    IssueGrant,
+    KernelArrived,
+    KernelEnded,
+    MachineEvent,
+    PreemptAtBoundary,
+    SampleOnSM,
+    grants_issue,
+)
+from .machine import KernelRun, Machine, MachineBase, SchedulerCore
 from .metrics import WorkloadMetrics, evaluate, geomean, summarize
 from .policies import (
     FIFO,
     LJF,
     MPMax,
     POLICIES,
+    Policy,
     SJF,
     SRTF,
     SRTFAdaptive,
     make_policy,
 )
 from .predictor import (
+    EWMAPredictor,
+    PREDICTORS,
+    Predictor,
     SimpleSlicingPredictor,
+    make_predictor,
+    register_predictor,
     staircase_blocks_in,
     staircase_runtime,
 )
@@ -43,16 +74,34 @@ from .workload import (
 
 __all__ = [
     "Arrival",
+    "BlockEnded",
+    "BlockStarted",
+    "Decision",
     "ERCBENCH",
+    "EWMAPredictor",
     "FIFO",
+    "Hold",
+    "IssueGrant",
+    "KernelArrived",
+    "KernelEnded",
+    "KernelRun",
     "KernelSpec",
     "LJF",
     "MPMax",
+    "Machine",
+    "MachineBase",
+    "MachineEvent",
     "N_SM",
     "POLICIES",
+    "PREDICTORS",
+    "Policy",
+    "PreemptAtBoundary",
+    "Predictor",
     "SJF",
     "SRTF",
     "SRTFAdaptive",
+    "SampleOnSM",
+    "SchedulerCore",
     "SimResult",
     "SimpleSlicingPredictor",
     "Simulator",
@@ -60,7 +109,10 @@ __all__ = [
     "WorkloadMetrics",
     "evaluate",
     "geomean",
+    "grants_issue",
     "make_policy",
+    "make_predictor",
+    "register_predictor",
     "simulate",
     "solo_runtime",
     "staircase_blocks_in",

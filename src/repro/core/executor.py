@@ -13,24 +13,30 @@ so lane parallelism is virtual while every block's duration is a real
 measurement — including JIT, cache and memory effects).  On a real pod the
 same loop runs with concurrent lanes and wall-clock time.
 
-The scheduler reuses the unmodified policy classes and Simple Slicing
-predictor from the DES: the executor duck-types the Simulator surface they
-consume.  Fault tolerance: ``fail_lane_at`` kills a lane mid-run (its block
-is lost and re-executed; the predictor starts a new slice since residency
-changed); ``straggler`` inflates one lane's durations until quarantined.
+The executor is the second concrete :class:`repro.core.machine.Machine`
+(the DES simulator is the first): the same
+:class:`repro.core.machine.SchedulerCore` — unmodified policies and
+predictor — schedules both.  Jobs may be present up-front or arrive late
+through :meth:`LaneExecutor.add_job` (the async
+:mod:`repro.core.scheduler_service` frontend builds on this plus
+:meth:`LaneExecutor.step` and :meth:`LaneExecutor.cancel`).
+
+Fault tolerance: ``fail_lane_at`` kills a lane mid-run (its block is lost
+and re-executed; the predictor starts a new slice since residency changed);
+``straggler`` inflates one lane's durations until quarantined.
 """
 
 from __future__ import annotations
 
 import heapq
 import itertools
-import math
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-from .predictor import SimpleSlicingPredictor
-from .simulator import KernelRun
+from .events import BlockEnded, BlockStarted, KernelArrived, KernelEnded, grants_issue
+from .machine import KernelRun, MachineBase
+from .predictor import Predictor
 from .workload import KernelSpec
 
 
@@ -41,7 +47,9 @@ class ExecutorJob:
     ``warmup_fn`` AOT-compiles the job's step functions without mutating its
     state — the executor invokes it before scheduling so that measured block
     durations (and hence the predictor's sampled ``t``) reflect steady-state
-    compute, not one-time JIT cost, as on a production system."""
+    compute, not one-time JIT cost, as on a production system.
+    ``tenant`` groups jobs for the multi-tenant service's per-tenant
+    metrics; it defaults to the job name."""
 
     name: str
     num_blocks: int
@@ -50,6 +58,7 @@ class ExecutorJob:
     arrival: float = 0.0
     est_block_seconds: float = 1.0   # only used by SJF's fallback oracle
     warmup_fn: Optional[Callable[[], None]] = None
+    tenant: Optional[str] = None
 
     def grid_spec(self) -> KernelSpec:
         # Reuse KernelSpec so the unmodified policies see the paper's fields.
@@ -69,9 +78,6 @@ class _LaneState:
         self.failed = False
         self.slow_factor = 1.0
 
-    def fits(self, spec) -> bool:
-        return self.busy is None and not self.failed
-
 
 @dataclass
 class JobResult:
@@ -80,28 +86,33 @@ class JobResult:
     finish: float
     blocks: int
     failures_absorbed: int = 0
+    cancelled: bool = False
 
     @property
     def turnaround(self) -> float:
         return self.finish - self.arrival
 
 
-class LaneExecutor:
-    """Duck-typed 'sim' for the policy classes, executing real steps."""
+class LaneExecutor(MachineBase):
+    """:class:`Machine` implementation over real JAX step executions.
 
-    def __init__(self, jobs: Sequence[ExecutorJob], policy, n_lanes: int = 4,
+    Job keys follow the ``{name}#{order}`` convention: the part before the
+    last ``#`` is the job/arch name (shared by solo-baseline maps), the part
+    after is the machine-wide arrival order.  Split with
+    ``key.rsplit("#", 1)[0]`` to recover the name.
+    """
+
+    def __init__(self, jobs: Sequence[ExecutorJob] = (), policy=None,
+                 n_lanes: int = 4,
                  fail_lane_at: Optional[Tuple[int, float]] = None,
                  straggler: Optional[Tuple[int, float]] = None,
-                 straggler_quarantine: float = 2.5):
+                 straggler_quarantine: float = 2.5,
+                 predictor: Union[str, Predictor, None] = None):
+        super().__init__(n_lanes, policy, predictor=predictor)
         self.n_lanes = n_lanes
-        self.policy = policy
-        self.now = 0.0
-        self.predictor = SimpleSlicingPredictor(n_lanes)
         self.sms = [_LaneState(i) for i in range(n_lanes)]
-        self.runs: Dict[str, KernelRun] = {}
         self.jobs: Dict[str, ExecutorJob] = {}
         self._block_fns: Dict[Tuple[str, int], Callable] = {}
-        self.oracle_runtimes: Dict[str, float] = {}
         self.fail_lane_at = fail_lane_at
         self.straggler = straggler
         self.straggler_quarantine = straggler_quarantine
@@ -113,15 +124,11 @@ class LaneExecutor:
         self._events: List[Tuple[float, int, int, tuple]] = []
         self._seq = itertools.count()
         self._bids = itertools.count()
+        self._order = itertools.count()
         self._dead_blocks: set = set()
         self._lane_bid: Dict[int, int] = {}
-        for order, job in enumerate(sorted(jobs, key=lambda j: j.arrival)):
-            key = f"{job.name}#{order}"
-            self.jobs[key] = job
-            run = KernelRun(key, job.grid_spec(), job.arrival, order)
-            self.runs[key] = run
-            heapq.heappush(self._events,
-                           (job.arrival, 0, next(self._seq), ("arrival", key)))
+        for job in sorted(jobs, key=lambda j: j.arrival):
+            self.add_job(job, warmup=False)
         if fail_lane_at is not None:
             lane, t = fail_lane_at
             heapq.heappush(self._events, (t, 0, next(self._seq),
@@ -131,35 +138,63 @@ class LaneExecutor:
         for job in jobs:
             if job.warmup_fn is not None:
                 job.warmup_fn()
-        policy.bind(self)
+        self.core.bind(self)
 
-    # ------------------------------------------------- Simulator interface
-    def active_keys(self) -> List[str]:
-        return [k for k, r in sorted(self.runs.items(),
-                                     key=lambda kv: kv[1].order)
-                if r.arrival_time <= self.now + 1e-12 and not r.finished]
+    # --------------------------------------------------------- job intake
+    def add_job(self, job: ExecutorJob, *, key: Optional[str] = None,
+                warmup: bool = True) -> str:
+        """Register one job, possibly while the machine is running.
 
-    def can_fit(self, key: str, lane: _LaneState) -> bool:
-        run = self.runs[key]
-        if run.unissued <= 0 or lane.busy is not None or lane.failed:
+        The job arrives at ``max(now, job.arrival)`` — a late submission
+        can never arrive in the machine's past.  Returns the job's key
+        (``{name}#{order}`` — see the class docstring).
+        """
+        order = next(self._order)
+        if key is None:
+            key = f"{job.name}#{order}"
+        if key in self.runs:
+            raise ValueError(f"duplicate job key {key!r}")
+        arrival = max(self.now, job.arrival)
+        self.jobs[key] = job
+        self.runs[key] = KernelRun(key, job.grid_spec(), arrival, order)
+        if warmup and job.warmup_fn is not None:
+            job.warmup_fn()
+        heapq.heappush(self._events,
+                       (arrival, 0, next(self._seq), ("arrival", key)))
+        return key
+
+    def cancel(self, key: str) -> bool:
+        """Cancel a job at the next block boundary.
+
+        Already-running blocks complete (state stays consistent — the same
+        property that makes preemption safe); no further blocks issue.
+        Returns False if the job is unknown or already finished.
+        """
+        run = self.runs.get(key)
+        if run is None or run.finished:
             return False
-        cap = min(run.spec.max_residency,
-                  self.policy.residency_cap(key, lane.index))
-        return self._residency(key) < cap
+        run.cancelled = True
+        run.finish_time = self.now
+        self.results[key] = JobResult(
+            key, run.arrival_time, self.now, run.done,
+            self.failures_absorbed, cancelled=True)
+        if run.launched:
+            self.core.post(KernelEnded(key, self.now))
+        self._dispatch()
+        return True
 
-    def elapsed(self, key: str) -> float:
-        return self.now - self.runs[key].arrival_time
+    # ------------------------------------------------------------ machine
+    def residency(self, key: str, sm: int) -> int:
+        return int(self.sms[sm].busy == key)
 
-    def oracle_runtime(self, key: str) -> Optional[float]:
-        return self.oracle_runtimes.get(self.runs[key].spec.name)
+    def _cap_residency(self, key: str, sm: int) -> int:
+        # On the pod the residency cap constrains the machine-wide lane
+        # count a job occupies (a lane runs one block at a time).
+        return self._residency(key)
 
-    def _sync_residency_caps(self) -> None:
-        for key in self.active_keys():
-            run = self.runs[key]
-            for lane in range(self.n_lanes):
-                cap = min(run.spec.max_residency,
-                          self.policy.residency_cap(key, lane))
-                self.predictor.on_residency_change(key, lane, cap)
+    def _fits_resources(self, key: str, sm: int) -> bool:
+        lane = self.sms[sm]
+        return lane.busy is None and not lane.failed
 
     def _residency(self, key: str) -> int:
         return sum(1 for ln in self.sms if ln.busy == key)
@@ -173,29 +208,37 @@ class LaneExecutor:
             self._block_fns[ck] = job.make_block_fn(residency)
         return self._block_fns[ck]
 
+    def pending_events(self) -> int:
+        return len(self._events)
+
+    def step(self) -> bool:
+        """Process one machine event (then dispatch); False when idle."""
+        if not self._events:
+            return False
+        t, _, _, payload = heapq.heappop(self._events)
+        self.now = max(self.now, t)
+        kind = payload[0]
+        if kind == "arrival":
+            self._on_arrival(payload[1])
+        elif kind == "block_end":
+            bid = payload[4]
+            if bid >= 0 and bid in self._dead_blocks:
+                return True                   # zombie event of lost block
+            self._on_block_end(*payload[1:])
+        elif kind == "fail_lane":
+            self._on_fail_lane(payload[1])
+        self._dispatch()
+        return True
+
     def run(self) -> Dict[str, JobResult]:
-        while self._events:
-            t, _, _, payload = heapq.heappop(self._events)
-            self.now = max(self.now, t)
-            kind = payload[0]
-            if kind == "arrival":
-                self._on_arrival(payload[1])
-            elif kind == "block_end":
-                bid = payload[4]
-                if bid >= 0 and bid in self._dead_blocks:
-                    continue                      # zombie event of lost block
-                self._on_block_end(*payload[1:])
-            elif kind == "fail_lane":
-                self._on_fail_lane(payload[1])
-            self._dispatch()
+        while self.step():
+            pass
         return self.results
 
     def _on_arrival(self, key: str) -> None:
-        run = self.runs[key]
-        self.predictor.on_launch(key, run.spec.num_blocks,
-                                 run.spec.max_residency)
-        self.policy.on_arrival(key)
-        self._sync_residency_caps()
+        if self.runs[key].finished:
+            return      # cancelled before its queued arrival event fired
+        self.core.post(KernelArrived(key, self.now))
 
     def _on_block_end(self, key: str, lane_idx: int, lost: bool,
                       bid: int = -1) -> None:
@@ -206,19 +249,25 @@ class LaneExecutor:
             # failed lane: block's work is discarded, re-issue it
             run.issued -= 1
             self.failures_absorbed += 1
-            self.predictor.reslice_all(key)
+            self.core.post(BlockEnded(key, lane_idx, 0, self.now, lost=True))
+            return
+        if run.cancelled:
+            # the job was cancelled while this block was in flight; the
+            # block's work is kept (state is consistent), so count it and
+            # settle the predictor's per-block bookkeeping — but nothing
+            # more issues and the policy was already notified at cancel.
+            run.done += 1
+            self.results[key].blocks = run.done
+            self.predictor.on_block_end(key, lane_idx, 0, self.now)
             return
         run.done += 1
-        self.predictor.on_block_end(key, lane_idx, 0, self.now)
-        self.policy.on_block_end(key, lane_idx)
+        self.core.post(BlockEnded(key, lane_idx, 0, self.now))
         if run.done >= run.spec.num_blocks:
             run.finish_time = self.now
             self.results[key] = JobResult(
                 key, run.arrival_time, self.now, run.done,
                 self.failures_absorbed)
-            self.predictor.on_kernel_end(key)
-            self.policy.on_kernel_end(key)
-            self._sync_residency_caps()
+            self.core.post(KernelEnded(key, self.now))
 
     def _on_fail_lane(self, lane_idx: int) -> None:
         lane = self.sms[lane_idx]
@@ -234,7 +283,7 @@ class LaneExecutor:
         # residency of every running job may have changed
         for key in self.active_keys():
             self.predictor.reslice_all(key)
-        self._sync_residency_caps()
+        self.sync_residency_caps()
 
     def _dispatch(self) -> None:
         progressed = True
@@ -243,8 +292,8 @@ class LaneExecutor:
             for lane in self.sms:
                 if lane.busy is not None or lane.failed:
                     continue
-                key = self.policy.pick(lane.index)
-                if key is None or not self.can_fit(key, lane):
+                key = grants_issue(self.core.decide(lane.index))
+                if key is None or not self.can_fit(key, lane.index):
                     continue
                 self._start_block(key, lane)
                 progressed = True
@@ -258,7 +307,7 @@ class LaneExecutor:
         dur = (time.perf_counter() - t0) * lane.slow_factor
         lane.busy = key
         run.issued += 1
-        self.predictor.on_block_start(key, lane.index, 0, self.now)
+        self.core.post(BlockStarted(key, lane.index, 0, self.now))
         self.trace.append((key, lane.index, self.now, self.now + dur))
         # straggler mitigation: quarantine lanes whose EWMA step time
         # exceeds the cross-lane median by the threshold factor

@@ -38,6 +38,7 @@ def make_train_job(
     checkpointer: Optional[Checkpointer] = None,
     checkpoint_every: int = 0,
     resume: bool = False,
+    tenant: Optional[str] = None,
 ) -> ExecutorJob:
     """A training job: ``blocks`` microbatch steps of a reduced model.
 
@@ -91,7 +92,7 @@ def make_train_job(
     return ExecutorJob(name=name, num_blocks=blocks - state["block"],
                        max_residency=max_residency,
                        make_block_fn=make_block_fn, arrival=arrival,
-                       warmup_fn=warmup)
+                       warmup_fn=warmup, tenant=tenant)
 
 
 def make_serve_job(
@@ -105,6 +106,7 @@ def make_serve_job(
     max_residency: int = 4,
     arrival: float = 0.0,
     seed: int = 0,
+    tenant: Optional[str] = None,
 ) -> ExecutorJob:
     """A serving job: ``blocks`` decode chunks of ``tokens_per_block`` each
     against a live KV cache (prefill happens in the first block)."""
@@ -150,4 +152,4 @@ def make_serve_job(
     return ExecutorJob(name=name, num_blocks=blocks,
                        max_residency=max_residency,
                        make_block_fn=make_block_fn, arrival=arrival,
-                       warmup_fn=warmup)
+                       warmup_fn=warmup, tenant=tenant)

@@ -1,0 +1,286 @@
+"""The ``Machine`` protocol and the ``SchedulerCore`` that drives it.
+
+This module formalizes the contract that used to be an informal duck-type
+between the policies and the two machines (DES simulator, real-JAX lane
+executor):
+
+* :class:`Machine` — the minimal **read surface** a scheduling policy or
+  predictor may touch: active runs, per-unit occupancy/fit/residency
+  queries, the machine clock, and oracle runtimes.  Both
+  :class:`repro.core.simulator.Simulator` and
+  :class:`repro.core.executor.LaneExecutor` implement it (and the
+  runtime-checkable protocol lets tests assert so).
+
+* :class:`KernelRun` — dynamic per-kernel state shared by every machine;
+  its attribute set is the run-level read surface policies see through
+  :meth:`Machine.run_state`.
+
+* :class:`MachineBase` — shared implementation of the protocol so machines
+  stop re-implementing ``active_keys`` / ``can_fit`` / residency-cap
+  propagation independently.  Concrete machines supply two hooks:
+  ``_cap_residency`` (which occupancy count the residency cap constrains)
+  and ``_fits_resources`` (whether one more block physically fits).
+
+* :class:`SchedulerCore` — the scheduling brain: one
+  :class:`~repro.core.policies.Policy` plus one
+  :class:`~repro.core.predictor.Predictor`, bound to a machine.  Machines
+  post typed events (:mod:`repro.core.events`) and ask for typed decisions;
+  the core fans events out to the predictor's Algorithm-1 handlers and the
+  policy's hooks in the paper's order.
+
+Anything block-granular that exposes this surface — a GPGPU-Sim-style DES,
+a TPU pod of gang-scheduled lanes, a cluster simulator — can be driven by
+the unmodified SRTF + Simple Slicing core, which is the paper's central
+engineering claim.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Union, runtime_checkable
+
+import numpy as np
+
+from .events import (
+    BlockEnded,
+    BlockStarted,
+    Decision,
+    KernelArrived,
+    KernelEnded,
+    MachineEvent,
+)
+from .predictor import Predictor, make_predictor
+from .workload import KernelSpec
+
+
+@dataclass
+class KernelRun:
+    """Dynamic state of one kernel instance on a machine."""
+
+    key: str
+    spec: KernelSpec
+    arrival_time: float
+    order: int
+    issued: int = 0
+    done: int = 0
+    finish_time: Optional[float] = None
+    first_issue_time: Optional[float] = None
+    cancelled: bool = False
+    #: True once the machine posted this run's KernelArrived event.  Until
+    #: then the run is invisible to the scheduler even if its arrival
+    #: timestamp has passed (two arrivals can share one instant; the second
+    #: must not be dispatched before its own launch is processed).
+    launched: bool = False
+    issued_per_sm: Dict[int, int] = field(default_factory=dict)
+    resident_per_sm: Dict[int, int] = field(default_factory=dict)
+    issue_gate: Dict[int, float] = field(default_factory=dict)
+    stagger_sm: Dict[int, bool] = field(default_factory=dict)
+    noise: Optional[np.ndarray] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_time is not None
+
+    @property
+    def unissued(self) -> int:
+        return self.spec.num_blocks - self.issued
+
+    def resident(self, sm: int) -> int:
+        return self.resident_per_sm.get(sm, 0)
+
+
+@runtime_checkable
+class Machine(Protocol):
+    """Minimal machine read surface for policies and predictors.
+
+    Everything a scheduling policy may legally touch goes through these
+    members; machine internals (event queues, SM resource pools, lane
+    states) are off-limits.
+    """
+
+    n_sm: int
+    now: float
+    predictor: Predictor
+
+    def active_keys(self) -> List[str]:
+        """Arrived, unfinished kernels in arrival order."""
+        ...
+
+    def run_state(self, key: str) -> KernelRun:
+        """Dynamic state of one kernel (read-only by convention)."""
+        ...
+
+    def residency(self, key: str, sm: int) -> int:
+        """Blocks of ``key`` currently resident on unit ``sm``."""
+        ...
+
+    def can_fit(self, key: str, sm: int) -> bool:
+        """Whether one more block of ``key`` may issue on unit ``sm``."""
+        ...
+
+    def elapsed(self, key: str) -> float:
+        """Machine time since ``key`` arrived."""
+        ...
+
+    def oracle_runtime(self, key: str) -> Optional[float]:
+        """True solo runtime, if an oracle provided one (SJF/LJF/zero)."""
+        ...
+
+    def sync_residency_caps(self) -> None:
+        """Re-propagate policy residency caps into the predictor
+        (Section 3.4.3: residency changes start a new slice)."""
+        ...
+
+
+class SchedulerCore:
+    """One policy + one predictor, bound to one machine.
+
+    The single entry point machines use:
+
+    * :meth:`post` — feed a typed event; the core updates the predictor
+      (Algorithm 1) and the policy hooks in the paper's order and returns
+      the predictor's fresh Eq. 2 estimate for ``BlockEnded`` events.
+    * :meth:`decide` — ask for a typed :class:`~repro.core.events.Decision`
+      for one execution unit.
+    * :meth:`residency_cap` — the policy's current per-(kernel, unit) cap.
+    """
+
+    def __init__(self, policy, predictor: Union[str, Predictor, None],
+                 n_sm: int):
+        self.policy = policy
+        self.predictor = make_predictor(predictor, n_sm)
+        self.machine: Optional[Machine] = None
+
+    def bind(self, machine: Machine) -> "SchedulerCore":
+        self.machine = machine
+        self.policy.bind(machine)
+        return self
+
+    def post(self, event: MachineEvent) -> Optional[float]:
+        if isinstance(event, KernelArrived):
+            run = self.machine.run_state(event.key)
+            run.launched = True
+            self.predictor.on_launch(
+                event.key, run.spec.num_blocks, run.spec.max_residency)
+            self.policy.on_arrival(event.key)
+            self.machine.sync_residency_caps()
+        elif isinstance(event, BlockStarted):
+            self.predictor.on_block_start(
+                event.key, event.sm, event.slot, event.time)
+        elif isinstance(event, BlockEnded):
+            if event.lost:
+                # Fault path: the block's work is discarded; its duration
+                # must not contaminate the estimate — start a new slice.
+                self.predictor.reslice_all(event.key)
+                return None
+            pred = self.predictor.on_block_end(
+                event.key, event.sm, event.slot, event.time)
+            self.policy.on_block_end(event.key, event.sm)
+            return pred
+        elif isinstance(event, KernelEnded):
+            self.predictor.on_kernel_end(event.key)
+            self.policy.on_kernel_end(event.key)
+            self.machine.sync_residency_caps()
+        else:  # pragma: no cover - exhaustive over MachineEvent
+            raise TypeError(f"unknown machine event {event!r}")
+        return None
+
+    def decide(self, sm: int) -> Decision:
+        return self.policy.decide(sm)
+
+    def residency_cap(self, key: str, sm: int) -> int:
+        return self.policy.residency_cap(key, sm)
+
+
+class MachineBase:
+    """Shared :class:`Machine` implementation for concrete machines.
+
+    Subclasses own their event loop and resource model and provide:
+
+    * ``_cap_residency(key, sm)`` — the occupancy count the policy's
+      residency cap constrains (per-SM resident blocks on the GPU,
+      machine-wide lane count on the pod),
+    * ``_fits_resources(key, sm)`` — whether one more block of ``key``
+      physically fits on unit ``sm`` right now.
+    """
+
+    def __init__(self, n_sm: int, policy,
+                 predictor: Union[str, Predictor, None] = None,
+                 oracle_runtimes: Optional[Dict[str, float]] = None):
+        self.n_sm = n_sm
+        self.now = 0.0
+        self.runs: Dict[str, KernelRun] = {}
+        self.oracle_runtimes: Dict[str, float] = dict(oracle_runtimes or {})
+        self.core = SchedulerCore(policy, predictor, n_sm)
+
+    # -- convenience views --------------------------------------------------
+    @property
+    def policy(self):
+        return self.core.policy
+
+    @property
+    def predictor(self) -> Predictor:
+        return self.core.predictor
+
+    # -- Machine protocol ---------------------------------------------------
+    def active_keys(self) -> List[str]:
+        """Arrived (launch event processed), unfinished kernels in arrival
+        order."""
+        return [
+            k for k, r in sorted(self.runs.items(), key=lambda kv: kv[1].order)
+            if r.launched and not r.finished
+        ]
+
+    def run_state(self, key: str) -> KernelRun:
+        return self.runs[key]
+
+    def residency(self, key: str, sm: int) -> int:
+        return self.runs[key].resident(sm)
+
+    def can_fit(self, key: str, sm: int) -> bool:
+        run = self.runs[key]
+        if run.unissued <= 0:
+            return False
+        cap = min(run.spec.max_residency, self.core.residency_cap(key, sm))
+        if self._cap_residency(key, sm) >= cap:
+            return False
+        return self._fits_resources(key, sm)
+
+    def elapsed(self, key: str) -> float:
+        return self.now - self.runs[key].arrival_time
+
+    def oracle_runtime(self, key: str) -> Optional[float]:
+        return self.oracle_runtimes.get(self.runs[key].spec.name)
+
+    def sync_residency_caps(self) -> None:
+        for key in self.active_keys():
+            if not self.predictor.has_kernel(key):
+                # Defensive invariant: active_keys() only returns launched
+                # runs, and SchedulerCore.post registers a run with the
+                # predictor in the same KernelArrived dispatch that marks
+                # it launched, so every key here should be known.  Skip
+                # rather than crash if a custom machine drives events in a
+                # different order.
+                continue
+            run = self.runs[key]
+            for sm in range(self.n_sm):
+                cap = min(run.spec.max_residency,
+                          self.core.residency_cap(key, sm))
+                self.predictor.on_residency_change(key, sm, cap)
+
+    # -- machine-specific hooks ---------------------------------------------
+    def _cap_residency(self, key: str, sm: int) -> int:
+        """Occupancy count the residency cap constrains on ``sm``."""
+        raise NotImplementedError
+
+    def _fits_resources(self, key: str, sm: int) -> bool:
+        """Whether one more block of ``key`` physically fits on ``sm``."""
+        raise NotImplementedError
+
+
+__all__ = [
+    "KernelRun",
+    "Machine",
+    "MachineBase",
+    "SchedulerCore",
+]

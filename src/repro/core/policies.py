@@ -1,12 +1,16 @@
 """Thread block scheduling policies (paper Section 5).
 
-All policies implement the same small interface consumed by both the
-discrete-event simulator and the real-JAX lane executor:
+All policies target the formal :class:`repro.core.machine.Machine` protocol
+— the only surface they may touch on the machine driving them (DES
+simulator, real-JAX lane executor, or any future backend):
 
-* ``bind(sim)``            — attach to a machine (simulator/executor),
-* ``pick(sm) -> key|None`` — which kernel may issue its next block on ``sm``,
+* ``bind(machine)``         — attach to a :class:`Machine`,
+* ``decide(sm) -> Decision`` — typed scheduling decision for unit ``sm``
+  (:class:`IssueGrant` / :class:`SampleOnSM` / :class:`Hold` /
+  :class:`PreemptAtBoundary`, see :mod:`repro.core.events`),
 * ``residency_cap(key, sm) -> int`` — per-kernel residency limit on ``sm``,
-* event hooks ``on_arrival`` / ``on_block_end`` / ``on_kernel_end``.
+* event hooks ``on_arrival`` / ``on_block_end`` / ``on_kernel_end``
+  (driven through :class:`repro.core.machine.SchedulerCore`).
 
 Policies:
 
@@ -21,7 +25,7 @@ Policies:
 * :class:`SRTF`      — Section 5.1.1: sample newly arrived kernels on one SM,
   broadcast the sampled ``t``, then run the predicted shortest-remaining-time
   kernel exclusively; preemption happens only at block boundaries, so
-  hand-off delay emerges naturally.
+  hand-off delay emerges naturally (the :class:`PreemptAtBoundary` decision).
 * :class:`SRTFAdaptive` — Section 5.1.2: SRTF plus a fairness monitor; when
   the projected slowdown gap exceeds ``unfairness_threshold`` (0.5), switch
   to sharing mode with the fastest kernel's residency capped at
@@ -34,20 +38,29 @@ import math
 from collections import deque
 from typing import Dict, List, Optional
 
+from .events import (
+    Decision,
+    Hold,
+    IssueGrant,
+    PreemptAtBoundary,
+    SampleOnSM,
+)
+
 _INF = float("inf")
 MAX_RESIDENCY_DEFAULT = 8
 
 
 class Policy:
-    """Base class: unlimited residency, no picks."""
+    """Base class: unlimited residency, no issue grants."""
 
     name = "base"
 
     def __init__(self):
-        self.sim = None
+        self.machine = None
 
-    def bind(self, sim) -> None:
-        self.sim = sim
+    def bind(self, machine) -> None:
+        """Attach to a :class:`repro.core.machine.Machine`."""
+        self.machine = machine
 
     # -- event hooks ---------------------------------------------------------
     def on_arrival(self, key: str) -> None:
@@ -61,14 +74,20 @@ class Policy:
 
     # -- decisions ------------------------------------------------------------
     def residency_cap(self, key: str, sm: int) -> int:
-        return self.sim.runs[key].spec.max_residency
+        return self._run(key).spec.max_residency
 
-    def pick(self, sm: int) -> Optional[str]:
+    def decide(self, sm: int) -> Decision:
         raise NotImplementedError
 
-    # -- helpers ---------------------------------------------------------------
+    # -- Machine-protocol helpers ---------------------------------------------
+    def _run(self, key: str):
+        return self.machine.run_state(key)
+
+    def _active(self) -> List[str]:
+        return self.machine.active_keys()
+
     def _fits(self, key: str, sm: int) -> bool:
-        return self.sim.can_fit(key, self.sim.sms[sm])
+        return self.machine.can_fit(key, sm)
 
 
 class _OrderedPolicy(Policy):
@@ -78,18 +97,20 @@ class _OrderedPolicy(Policy):
     def order(self) -> List[str]:
         raise NotImplementedError
 
-    def pick(self, sm: int) -> Optional[str]:
+    def decide(self, sm: int) -> Decision:
         for key in self.order():
-            if self.sim.runs[key].unissued > 0:
-                return key if self._fits(key, sm) else None
-        return None
+            if self._run(key).unissued > 0:
+                if self._fits(key, sm):
+                    return IssueGrant(key)
+                return Hold("head-of-line kernel does not fit")
+        return Hold("no kernel with undispatched blocks")
 
 
 class FIFO(_OrderedPolicy):
     name = "fifo"
 
     def order(self) -> List[str]:
-        return self.sim.active_keys()
+        return self._active()
 
 
 class SJF(_OrderedPolicy):
@@ -99,15 +120,15 @@ class SJF(_OrderedPolicy):
     _sign = 1.0
 
     def _runtime(self, key: str) -> float:
-        rt = self.sim.oracle_runtime(key)
+        rt = self.machine.oracle_runtime(key)
         if rt is None:
-            rt = self.sim.runs[key].spec.solo_staircase_runtime()
+            rt = self._run(key).spec.solo_staircase_runtime()
         return rt
 
     def order(self) -> List[str]:
-        keys = self.sim.active_keys()
+        keys = self._active()
         return sorted(keys, key=lambda k: (self._sign * self._runtime(k),
-                                           self.sim.runs[k].order))
+                                           self._run(k).order))
 
 
 class LJF(SJF):
@@ -131,12 +152,12 @@ class MPMax(Policy):
         self._caps: Dict[str, int] = {}
 
     def _recompute(self) -> None:
-        active = self.sim.active_keys()
+        active = self._active()
         self._caps = {}
         for key in active:
-            spec = self.sim.runs[key].spec
+            spec = self._run(key).spec
             reserved = sum(
-                self.sim.runs[other].spec.resource_fraction
+                self._run(other).spec.resource_fraction
                 for other in active if other != key)
             cap = int(math.floor(spec.max_residency * (1.0 - reserved)))
             self._caps[key] = max(1, cap)
@@ -148,15 +169,15 @@ class MPMax(Policy):
         self._recompute()
 
     def residency_cap(self, key: str, sm: int) -> int:
-        return self._caps.get(key, self.sim.runs[key].spec.max_residency)
+        return self._caps.get(key, self._run(key).spec.max_residency)
 
-    def pick(self, sm: int) -> Optional[str]:
+    def decide(self, sm: int) -> Decision:
         # FIFO order up to each kernel's MPMax limit; when a kernel hits its
         # limit the next kernel in FIFO order gets to issue (Section 5.2.2).
-        for key in self.sim.active_keys():
-            if self.sim.runs[key].unissued > 0 and self._fits(key, sm):
-                return key
-        return None
+        for key in self._active():
+            if self._run(key).unissued > 0 and self._fits(key, sm):
+                return IssueGrant(key)
+        return Hold("all kernels at their MPMax reservation caps")
 
 
 class SRTF(Policy):
@@ -175,13 +196,18 @@ class SRTF(Policy):
     def _start_next_sample(self) -> None:
         while self.sampling is None and self.sample_queue:
             key = self.sample_queue.popleft()
-            run = self.sim.runs.get(key)
-            if run is None or run.finished or key in self.eligible:
+            if key in self.eligible:
+                continue
+            try:
+                run = self._run(key)
+            except KeyError:
+                continue
+            if run.finished:
                 continue
             self.sampling = key
 
     def on_arrival(self, key: str) -> None:
-        active = self.sim.active_keys()
+        active = self._active()
         if len(active) == 1:
             # Arrived on an idle machine: runs immediately; its predictions
             # accumulate from its own execution.
@@ -192,9 +218,9 @@ class SRTF(Policy):
 
     def on_block_end(self, key: str, sm: int) -> None:
         if key == self.sampling and sm == self.sample_sm:
-            t = self.sim.predictor.state(key, sm).t
+            t = self.machine.predictor.sampled_t(key, sm)
             if t is not None:
-                self.sim.predictor.broadcast_t(key, t, from_sm=sm)
+                self.machine.predictor.broadcast_t(key, t, from_sm=sm)
                 self.eligible.add(key)
                 self.sampling = None
                 self._start_next_sample()
@@ -208,37 +234,37 @@ class SRTF(Policy):
         self._start_next_sample()
         # If only one kernel remains un-predicted, it no longer needs a
         # sample to be scheduled.
-        active = self.sim.active_keys()
+        active = self._active()
         if len(active) == 1:
             self.eligible.add(active[0])
 
     # ------------------------------------------------------------- ranking
     def _remaining(self, key: str, sm: int) -> float:
-        r = self.sim.predictor.remaining(key, sm)
+        r = self.machine.predictor.remaining(key, sm)
         if r is None:
-            r = self.sim.predictor.gpu_remaining(key)
+            r = self.machine.predictor.gpu_remaining(key)
         return r if r is not None else _INF
 
     def _candidates(self, sm: int) -> List[str]:
-        keys = [k for k in self.sim.active_keys()
-                if k in self.eligible and self.sim.runs[k].unissued > 0]
+        keys = [k for k in self._active()
+                if k in self.eligible and self._run(k).unissued > 0]
         return sorted(keys, key=lambda k: (self._remaining(k, sm),
-                                           self.sim.runs[k].order))
+                                           self._run(k).order))
 
-    # ----------------------------------------------------------------- pick
-    def pick(self, sm: int) -> Optional[str]:
+    # --------------------------------------------------------------- decide
+    def decide(self, sm: int) -> Decision:
         if self.sampling is not None and sm == self.sample_sm:
             key = self.sampling
-            if self.sim.runs[key].unissued > 0 and self._fits(key, sm):
-                return key
-            return None
+            if self._run(key).unissued > 0 and self._fits(key, sm):
+                return SampleOnSM(key)
+            return Hold("sample in flight on the sampling SM")
         for key in self._candidates(sm):
             if self._fits(key, sm):
-                return key
+                return IssueGrant(key)
             # Exclusive execution: do not backfill behind the SRTF winner
             # while its blocks (or a draining co-runner's) occupy the SM.
-            return None
-        return None
+            return PreemptAtBoundary(key)
+        return Hold("no eligible kernel with a prediction")
 
 
 class SRTFAdaptive(SRTF):
@@ -259,18 +285,19 @@ class SRTFAdaptive(SRTF):
     # -------------------------------------------------------------- fairness
     def _predictions(self) -> Optional[List[tuple]]:
         """Return [(key, elapsed, remaining, solo_estimate)] or None."""
-        active = [k for k in self.sim.active_keys() if k in self.eligible]
+        active = [k for k in self._active() if k in self.eligible]
         if len(active) < 2:
             return None
         rows = []
         for key in active:
-            rem = self.sim.predictor.gpu_remaining(key)
+            rem = self.machine.predictor.gpu_remaining(key)
             if rem is None:
                 return None
-            elapsed = self.sim.elapsed(key)
+            elapsed = self.machine.elapsed(key)
             solo = self._excl_pred.get(key)
             if solo is None:
-                solo = self.sim.predictor.gpu_predicted_total(key, self.sim.now)
+                solo = self.machine.predictor.gpu_predicted_total(
+                    key, self.machine.now)
             if solo is None or solo <= 0:
                 return None
             rows.append((key, elapsed, rem, solo))
@@ -291,16 +318,15 @@ class SRTFAdaptive(SRTF):
     def _project_sharing(self, rows) -> List[float]:
         rows = sorted(rows, key=lambda r: r[2])
         winner_key, w_elapsed, w_rem, w_solo = rows[0]
-        w_run = self.sim.runs[winner_key]
-        cur_cap = max(1, min(self._cap_now(winner_key),
-                             w_run.spec.max_residency))
-        shared_w = min(self.shared_residency, w_run.spec.max_residency)
+        w_spec = self._run(winner_key).spec
+        cur_cap = max(1, min(self._cap_now(winner_key), w_spec.max_residency))
+        shared_w = min(self.shared_residency, w_spec.max_residency)
         ts1 = w_rem * cur_cap / shared_w
         slow = [(w_elapsed + ts1) / w_solo]
         for key, elapsed, rem, solo in rows[1:]:
-            run = self.sim.runs[key]
-            full = run.spec.max_residency
-            shared_cap = self._loser_cap(run.spec, rows[0][0])
+            spec = self._run(key).spec
+            full = spec.max_residency
+            shared_cap = self._loser_cap(spec, rows[0][0])
             cur = max(1, min(self._cap_now(key), full))
             s_l = rem * cur / shared_cap      # time to finish at shared cap
             if s_l <= ts1:
@@ -311,10 +337,10 @@ class SRTFAdaptive(SRTF):
         return slow
 
     def _cap_now(self, key: str) -> int:
-        return self._caps.get(key, self.sim.runs[key].spec.max_residency)
+        return self._caps.get(key, self._run(key).spec.max_residency)
 
     def _loser_cap(self, spec, winner_key: str) -> int:
-        w_spec = self.sim.runs[winner_key].spec
+        w_spec = self._run(winner_key).spec
         shared_w = min(self.shared_residency, w_spec.max_residency)
         free_frac = 1.0 - shared_w * w_spec.resource_fraction
         return max(1, int(math.floor(free_frac * spec.max_residency)))
@@ -325,7 +351,7 @@ class SRTFAdaptive(SRTF):
             if self.sharing:
                 self.sharing = False
                 self._caps = {}
-                self.sim._sync_residency_caps()
+                self.machine.sync_residency_caps()
             return
         gap_excl = self._gap(self._project_exclusive(rows))
         gap_shared = self._gap(self._project_sharing(rows))
@@ -336,7 +362,7 @@ class SRTFAdaptive(SRTF):
         if want_sharing:
             winner = min(rows, key=lambda r: r[2])[0]
             for key, *_ in rows:
-                spec = self.sim.runs[key].spec
+                spec = self._run(key).spec
                 if key == winner:
                     new_caps[key] = min(self.shared_residency,
                                         spec.max_residency)
@@ -345,7 +371,7 @@ class SRTFAdaptive(SRTF):
         if want_sharing != self.sharing or new_caps != self._caps:
             self.sharing = want_sharing
             self._caps = new_caps
-            self.sim._sync_residency_caps()
+            self.machine.sync_residency_caps()
 
     # ------------------------------------------------------------------ hooks
     def on_arrival(self, key: str) -> None:
@@ -357,7 +383,8 @@ class SRTFAdaptive(SRTF):
         if not self.sharing:
             # Remember the exclusive-conditions prediction (Section 5.1.2:
             # "the prediction from the exclusive part of a run").
-            pred = self.sim.predictor.gpu_predicted_total(key, self.sim.now)
+            pred = self.machine.predictor.gpu_predicted_total(
+                key, self.machine.now)
             if pred is not None:
                 self._excl_pred[key] = pred
         self._reevaluate()
@@ -371,21 +398,21 @@ class SRTFAdaptive(SRTF):
     def residency_cap(self, key: str, sm: int) -> int:
         if self.sharing and key in self._caps:
             return self._caps[key]
-        return self.sim.runs[key].spec.max_residency
+        return self._run(key).spec.max_residency
 
-    def pick(self, sm: int) -> Optional[str]:
+    def decide(self, sm: int) -> Decision:
         if not self.sharing:
-            return super().pick(sm)
+            return super().decide(sm)
         if self.sampling is not None and sm == self.sample_sm:
             key = self.sampling
-            if self.sim.runs[key].unissued > 0 and self._fits(key, sm):
-                return key
-            return None
+            if self._run(key).unissued > 0 and self._fits(key, sm):
+                return SampleOnSM(key)
+            return Hold("sample in flight on the sampling SM")
         # Sharing mode: co-run, shortest first, up to the adaptive caps.
         for key in self._candidates(sm):
             if self._fits(key, sm):
-                return key
-        return None
+                return IssueGrant(key)
+        return Hold("all kernels at their adaptive sharing caps")
 
 
 class CappedFIFO(FIFO):
@@ -415,10 +442,10 @@ class SRTFZeroSampling(SRTF):
         self.eligible.add(key)              # no sampling phase
 
     def _remaining(self, key: str, sm: int) -> float:
-        rt = self.sim.oracle_runtime(key)
+        rt = self.machine.oracle_runtime(key)
         if rt is None:
             return super()._remaining(key, sm)
-        run = self.sim.runs[key]
+        run = self._run(key)
         frac_left = 1.0 - run.done / max(1, run.spec.num_blocks)
         return rt * frac_left
 

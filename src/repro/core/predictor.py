@@ -3,15 +3,19 @@
 Implements:
 
 * the Staircase model (Eq. 1):          ``T = ceil(N / R) * t``
+* the :class:`Predictor` interface      (Algorithm 1 event handlers plus the
+  query surface policies consume), with a registry of pluggable
+  implementations (``register_predictor`` / ``make_predictor``),
 * the Simple Slicing (SS) predictor     (Table 1 state, Algorithm 1 handlers,
-  Eq. 2 prediction), maintained per execution unit ("SM" on the GPU, "lane"
-  on a TPU pod) and per kernel/job.
+  Eq. 2 prediction) — the paper's predictor and the registry default,
+* an EWMA baseline predictor            (same interface, blends every block
+  duration instead of resampling at slice boundaries) proving the seam.
 
-The predictor is backend-independent: the discrete-event simulator
-(:mod:`repro.core.simulator`) and the real-JAX lane executor
-(:mod:`repro.core.executor`) both drive it through the four events of
-Algorithm 1 (``on_launch`` / ``on_block_start`` / ``on_block_end`` /
-``on_kernel_end``) plus the residency-change reslice of Section 3.4.3.
+Predictors are backend-independent: any :class:`repro.core.machine.Machine`
+(the discrete-event simulator, the real-JAX lane executor, future cluster
+backends) drives them through the four events of Algorithm 1 (``on_launch``
+/ ``on_block_start`` / ``on_block_end`` / ``on_kernel_end``) plus the
+residency-change reslice of Section 3.4.3.
 
 Terminology note: we keep the paper's names (SM, thread block, kernel,
 residency).  In the TPU adaptation SM=lane, block=step, kernel=job; the math
@@ -21,8 +25,9 @@ is identical (see DESIGN.md Section 2).
 from __future__ import annotations
 
 import math
+from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Type, Union
 
 
 def staircase_runtime(num_blocks: int, residency: int, t: float) -> float:
@@ -45,6 +50,124 @@ def staircase_blocks_in(time: float, residency: int, t: float) -> int:
     if t <= 0 or time <= 0:
         return 0
     return int((time * max(1, residency)) / t)
+
+
+# ---------------------------------------------------------------- interface
+
+
+class Predictor(ABC):
+    """Online runtime predictor driven by Algorithm-1 events.
+
+    One instance serves a whole machine; state is per ``(kernel, sm)``.
+    Machines post events through :class:`repro.core.machine.SchedulerCore`;
+    policies query predictions through the read methods.  Implementations
+    register with :func:`register_predictor` and are instantiated by name
+    via :func:`make_predictor` (machines accept either a name or an
+    instance).
+    """
+
+    #: Registry name, set by :func:`register_predictor`.
+    name: str = "base"
+
+    def __init__(self, n_sm: int):
+        self.n_sm = n_sm
+
+    # -- Algorithm 1 event handlers ----------------------------------------
+    @abstractmethod
+    def on_launch(self, kernel: str, total_blocks: int, residency: int) -> None:
+        """ONLAUNCH: a kernel with ``total_blocks`` blocks became visible."""
+
+    @abstractmethod
+    def on_block_start(self, kernel: str, sm: int, blkindex: int,
+                       now: float) -> None:
+        """ONBLOCKSTART: one block of ``kernel`` started on ``sm``."""
+
+    @abstractmethod
+    def on_block_end(self, kernel: str, sm: int, blkindex: int,
+                     now: float) -> Optional[float]:
+        """ONBLOCKEND: returns the updated total-runtime prediction."""
+
+    @abstractmethod
+    def on_kernel_end(self, kernel: str) -> None:
+        """ONKERNELEND: every block of ``kernel`` completed."""
+
+    @abstractmethod
+    def on_residency_change(self, kernel: str, sm: int,
+                            new_residency: int) -> None:
+        """Section 3.4.3: the residency cap for ``(kernel, sm)`` changed."""
+
+    # -- slice management ---------------------------------------------------
+    @abstractmethod
+    def reslice_all(self, kernel: Optional[str] = None) -> None:
+        """Force a new slice (e.g. co-runner set changed, Section 3.4.4)."""
+
+    @abstractmethod
+    def broadcast_t(self, kernel: str, t: float, from_sm: int) -> None:
+        """SRTF sampling (Section 5.1.1): seed other units with a sample."""
+
+    # -- queries ------------------------------------------------------------
+    @abstractmethod
+    def has_kernel(self, kernel: str) -> bool:
+        """Whether ``kernel`` has been launched and not dropped."""
+
+    @abstractmethod
+    def sampled_t(self, kernel: str, sm: int) -> Optional[float]:
+        """Current per-block duration estimate for ``(kernel, sm)``."""
+
+    @abstractmethod
+    def done_blocks(self, kernel: str, sm: int) -> int:
+        """Blocks of ``kernel`` completed on ``sm`` so far."""
+
+    @abstractmethod
+    def remaining(self, kernel: str, sm: int) -> Optional[float]:
+        """Predicted remaining cycles for ``(kernel, sm)`` — SRTF's key."""
+
+    @abstractmethod
+    def gpu_remaining(self, kernel: str) -> Optional[float]:
+        """Machine-level remaining-time estimate across units."""
+
+    @abstractmethod
+    def gpu_predicted_total(self, kernel: str, now: float) -> Optional[float]:
+        """Machine-level Eq. 2 total-runtime prediction."""
+
+
+#: Registry of predictor implementations, keyed by their public name.
+PREDICTORS: Dict[str, Type[Predictor]] = {}
+
+DEFAULT_PREDICTOR = "simple-slicing"
+
+
+def register_predictor(name: str):
+    """Class decorator registering a :class:`Predictor` under ``name``."""
+
+    def decorate(cls: Type[Predictor]) -> Type[Predictor]:
+        cls.name = name
+        PREDICTORS[name] = cls
+        return cls
+
+    return decorate
+
+
+def make_predictor(spec: Union[str, Predictor, None], n_sm: int,
+                   **kwargs) -> Predictor:
+    """Resolve ``spec`` into a predictor instance bound to ``n_sm`` units.
+
+    ``spec`` may be an instance (returned as-is), a registered name, or
+    ``None`` for the default (``simple-slicing``, the paper's predictor).
+    """
+    if isinstance(spec, Predictor):
+        return spec
+    name = DEFAULT_PREDICTOR if spec is None else spec
+    try:
+        cls = PREDICTORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown predictor {name!r}; choose from {sorted(PREDICTORS)}"
+        ) from None
+    return cls(n_sm, **kwargs)
+
+
+# ------------------------------------------------------------ simple slicing
 
 
 @dataclass
@@ -71,7 +194,8 @@ class PerSMState:
         return self.active_cycles
 
 
-class SimpleSlicingPredictor:
+@register_predictor("simple-slicing")
+class SimpleSlicingPredictor(Predictor):
     """The Simple Slicing (SS) online runtime predictor (Section 4).
 
     One instance serves a whole machine: state is per ``(kernel, sm)``.
@@ -87,7 +211,7 @@ class SimpleSlicingPredictor:
     """
 
     def __init__(self, n_sm: int):
-        self.n_sm = n_sm
+        super().__init__(n_sm)
         self._state: Dict[str, Dict[int, PerSMState]] = {}
 
     # ------------------------------------------------------------------ state
@@ -100,8 +224,18 @@ class SimpleSlicingPredictor:
     def drop_kernel(self, kernel: str) -> None:
         self._state.pop(kernel, None)
 
-    def kernels(self):
+    def kernels(self) -> List[str]:
         return list(self._state)
+
+    def sampled_t(self, kernel: str, sm: int) -> Optional[float]:
+        if kernel not in self._state:
+            return None
+        return self._state[kernel][sm].t
+
+    def done_blocks(self, kernel: str, sm: int) -> int:
+        if kernel not in self._state:
+            return 0
+        return self._state[kernel][sm].done_blocks
 
     # ------------------------------------------------------- Algorithm 1 ----
     def on_launch(self, kernel: str, total_blocks: int, residency: int) -> None:
@@ -139,20 +273,29 @@ class SimpleSlicingPredictor:
             st.running_since = now
         st.running_count += 1
 
-    def on_block_end(self, kernel: str, sm: int, blkindex: int, now: float) -> float:
+    def on_block_end(self, kernel: str, sm: int, blkindex: int, now: float) -> Optional[float]:
         """ONBLOCKEND + Eq. 2.  Returns the new Pred_Cycles for (kernel, sm)."""
         st = self.state(kernel, sm)
         st.done_blocks += 1
-        if st.reslice or st.t is None:
-            start = st.block_start.get(blkindex)
-            if start is not None:
-                st.t = now - start
-            st.reslice = False
-        st.block_start.pop(blkindex, None)
+        start = st.block_start.pop(blkindex, None)
+        self._observe(st, None if start is None else now - start)
         st.running_count = max(0, st.running_count - 1)
         if st.running_count == 0:
             st.active_cycles += now - st.running_since
         return self.predict(kernel, sm, now)
+
+    def _observe(self, st: PerSMState, duration: Optional[float]) -> None:
+        """Fold one measured block duration into the ``t`` estimate.
+
+        Simple Slicing resamples ``t`` only at slice boundaries (Section 4):
+        the first completed block of a new slice sets ``t``; later blocks of
+        the same slice are ignored.  Subclasses override this to implement
+        other estimators against identical bookkeeping.
+        """
+        if st.reslice or st.t is None:
+            if duration is not None:
+                st.t = duration
+            st.reslice = False
 
     # --------------------------------------------------------- reslicing ----
     def on_residency_change(self, kernel: str, sm: int, new_residency: int) -> None:
@@ -229,3 +372,32 @@ class SimpleSlicingPredictor:
         if not vals:
             return None
         return sum(vals) / len(vals)
+
+
+# ------------------------------------------------------------ EWMA baseline
+
+
+@register_predictor("ewma")
+class EWMAPredictor(SimpleSlicingPredictor):
+    """Exponentially-weighted moving-average baseline predictor.
+
+    Shares Simple Slicing's Table-1 bookkeeping and Eq. 2 projection but
+    replaces the slice-boundary resampling of ``t`` with a continuous EWMA
+    over *every* measured block duration.  It has no notion of slices, so it
+    adapts slowly after residency changes (exactly the failure mode
+    Section 3.4.3 motivates) — a useful control to quantify what Simple
+    Slicing's reslicing buys, and the proof that the predictor seam is real.
+    """
+
+    def __init__(self, n_sm: int, alpha: float = 0.3):
+        super().__init__(n_sm)
+        self.alpha = alpha
+
+    def _observe(self, st: PerSMState, duration: Optional[float]) -> None:
+        st.reslice = False
+        if duration is None:
+            return
+        if st.t is None:
+            st.t = duration
+        else:
+            st.t = self.alpha * duration + (1.0 - self.alpha) * st.t

@@ -2,8 +2,16 @@
 
 This is the GPGPU-Sim analogue used for the paper's evaluation (Section 6):
 15 SMs (Table 4), block-granular resource allocation, a pluggable thread
-block scheduler (:mod:`repro.core.policies`), and the Simple Slicing
-predictor (:mod:`repro.core.predictor`) wired to the four Algorithm-1 events.
+block scheduler (:mod:`repro.core.policies`), and a pluggable structural
+runtime predictor (:mod:`repro.core.predictor`) wired to the four
+Algorithm-1 events.
+
+The simulator is one concrete :class:`repro.core.machine.Machine`: the
+scheduling brain lives in a :class:`repro.core.machine.SchedulerCore`
+(policy + predictor) that the simulator drives with typed events and asks
+for typed decisions (:mod:`repro.core.events`); the real-JAX lane executor
+(:mod:`repro.core.executor`) implements the same protocol, so the identical
+core schedules both.
 
 Design notes
 ------------
@@ -19,8 +27,6 @@ Design notes
 * Staggered starts (Section 3.3): on stagger-affected SMs, first-wave issues
   are serialised by an issue *gate*; the scheduler re-tries when the gate
   opens.
-* The same policy/predictor objects are reused unchanged by the real-JAX
-  lane executor (:mod:`repro.core.executor`).
 """
 
 from __future__ import annotations
@@ -29,12 +35,21 @@ import heapq
 import itertools
 import math
 import zlib
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .predictor import SimpleSlicingPredictor
+from .events import (
+    BlockEnded,
+    BlockStarted,
+    Decision,
+    KernelArrived,
+    KernelEnded,
+    grants_issue,
+)
+from .machine import KernelRun, MachineBase
+from .predictor import Predictor
 from .workload import (
     Arrival,
     KernelSpec,
@@ -66,36 +81,6 @@ class PredictionRecord:
     time: float            # when the prediction was made
     done_blocks: int       # blocks done on this SM at prediction time
     predicted_total: float # Pred_Cycles (total runtime from kernel start)
-
-
-@dataclass
-class KernelRun:
-    """Dynamic state of one kernel instance inside the simulator."""
-
-    key: str
-    spec: KernelSpec
-    arrival_time: float
-    order: int
-    issued: int = 0
-    done: int = 0
-    finish_time: Optional[float] = None
-    first_issue_time: Optional[float] = None
-    issued_per_sm: Dict[int, int] = field(default_factory=dict)
-    resident_per_sm: Dict[int, int] = field(default_factory=dict)
-    issue_gate: Dict[int, float] = field(default_factory=dict)
-    stagger_sm: Dict[int, bool] = field(default_factory=dict)
-    noise: Optional[np.ndarray] = None
-
-    @property
-    def finished(self) -> bool:
-        return self.finish_time is not None
-
-    @property
-    def unissued(self) -> int:
-        return self.spec.num_blocks - self.issued
-
-    def resident(self, sm: int) -> int:
-        return self.resident_per_sm.get(sm, 0)
 
 
 class SMState:
@@ -135,8 +120,9 @@ class SMState:
 _ARRIVAL, _BLOCK_END, _TRY_ISSUE = 0, 1, 2
 
 
-class Simulator:
-    """Discrete-event GPU simulator with a pluggable TBS policy."""
+class Simulator(MachineBase):
+    """Discrete-event GPU simulator — a :class:`Machine` with a pluggable
+    scheduling core (policy + predictor)."""
 
     def __init__(
         self,
@@ -146,21 +132,20 @@ class Simulator:
         seed: int = 0,
         record_trace: bool = False,
         record_predictions: bool = False,
+        record_decisions: bool = False,
         oracle_runtimes: Optional[Dict[str, float]] = None,
+        predictor: Union[str, Predictor, None] = None,
     ):
-        self.n_sm = n_sm
-        self.policy = policy
+        super().__init__(n_sm, policy, predictor=predictor,
+                         oracle_runtimes=oracle_runtimes)
         self.seed = seed
-        self.now = 0.0
-        self.predictor = SimpleSlicingPredictor(n_sm)
         self.sms = [SMState(i) for i in range(n_sm)]
-        self.runs: Dict[str, KernelRun] = {}
-        self.oracle_runtimes = oracle_runtimes or {}
         self._events: List[Tuple[float, int, int, tuple]] = []
         self._seq = itertools.count()
         self.trace: List[BlockRecord] = [] if record_trace else None
         self.predictions: List[PredictionRecord] = [] if record_predictions else None
-        self._retry_scheduled: Dict[Tuple[int, float], bool] = {}
+        self.decisions: List[Tuple[float, int, Decision]] = \
+            [] if record_decisions else None
 
         for order, arr in enumerate(sorted(arrivals, key=lambda a: a.time)):
             run = KernelRun(arr.key, arr.spec, arr.time, order)
@@ -168,7 +153,7 @@ class Simulator:
             self.runs[arr.key] = run
             self._push(arr.time, _ARRIVAL, (arr.key,))
 
-        policy.bind(self)
+        self.core.bind(self)
 
     # ------------------------------------------------------------ rng setup
     def _init_kernel_rng(self, run: KernelRun) -> None:
@@ -209,10 +194,7 @@ class Simulator:
 
     # ------------------------------------------------------------- handlers
     def _handle_arrival(self, key: str) -> None:
-        run = self.runs[key]
-        self.predictor.on_launch(key, run.spec.num_blocks, run.spec.max_residency)
-        self.policy.on_arrival(key)
-        self._sync_residency_caps()
+        self.core.post(KernelArrived(key, self.now))
         for sm in self.sms:
             self._try_issue(sm)
 
@@ -222,49 +204,39 @@ class Simulator:
         sm.free(slot, run.spec)
         run.resident_per_sm[sm_index] -= 1
         run.done += 1
-        pred = self.predictor.on_block_end(key, sm_index, slot, self.now)
+        pred = self.core.post(BlockEnded(key, sm_index, slot, self.now))
         if self.predictions is not None and pred is not None:
-            st = self.predictor.state(key, sm_index)
             self.predictions.append(PredictionRecord(
-                key, sm_index, self.now, st.done_blocks, pred))
-        self.policy.on_block_end(key, sm_index)
+                key, sm_index, self.now,
+                self.predictor.done_blocks(key, sm_index), pred))
         if run.done == run.spec.num_blocks:
             run.finish_time = self.now
-            self.predictor.on_kernel_end(key)
-            self.policy.on_kernel_end(key)
-            self._sync_residency_caps()
+            self.core.post(KernelEnded(key, self.now))
             for other_sm in self.sms:
                 self._try_issue(other_sm)
         else:
             self._try_issue(sm)
 
     # ---------------------------------------------------------------- issue
-    def active_keys(self) -> List[str]:
-        """Arrived, unfinished kernels in arrival order."""
-        return [
-            k for k, r in sorted(self.runs.items(), key=lambda kv: kv[1].order)
-            if r.arrival_time <= self.now + _EPS and not r.finished
-        ]
+    def _cap_residency(self, key: str, sm: int) -> int:
+        # On the GPU the residency cap constrains per-SM resident blocks.
+        return self.runs[key].resident(sm)
 
-    def can_fit(self, key: str, sm: SMState) -> bool:
-        run = self.runs[key]
-        if run.unissued <= 0:
-            return False
-        cap = min(run.spec.max_residency,
-                  self.policy.residency_cap(key, sm.index))
-        if run.resident(sm.index) >= cap:
-            return False
-        return sm.fits(run.spec)
+    def _fits_resources(self, key: str, sm: int) -> bool:
+        return self.sms[sm].fits(self.runs[key].spec)
 
     def _try_issue(self, sm: SMState) -> None:
-        # Issue as many blocks as the policy allows in this batch, then
+        # Issue as many blocks as the core grants in this batch, then
         # compute durations with the *post-batch* SM conditions: blocks that
         # start at the same instant all execute at the final residency (as on
         # hardware, where a whole wave is dispatched together) rather than at
         # the transient residency seen mid-dispatch.
         batch: List[tuple] = []  # (run, slot, noise_idx, first_wave)
         while True:
-            key = self.policy.pick(sm.index)
+            decision = self.core.decide(sm.index)
+            if self.decisions is not None:
+                self.decisions.append((self.now, sm.index, decision))
+            key = grants_issue(decision)
             if key is None:
                 break
             run = self.runs[key]
@@ -272,8 +244,8 @@ class Simulator:
             if gate > self.now + _EPS:
                 self._push(gate, _TRY_ISSUE, (sm.index,))
                 break
-            if not self.can_fit(key, sm):
-                break  # defensive: policies only pick issuable kernels
+            if not self.can_fit(key, sm.index):
+                break  # defensive: the core only grants issuable kernels
             batch.append(self._allocate_block(run, sm))
         for run, slot, noise_idx, first_wave in batch:
             self._finalize_block(run, sm, slot, noise_idx, first_wave)
@@ -310,29 +282,11 @@ class Simulator:
             _NO_NOISE_RNG, residency, corunner_warps, first_wave)
         duration = base * float(run.noise[noise_idx])
 
-        self.predictor.on_block_start(run.key, sm.index, slot, self.now)
+        self.core.post(BlockStarted(run.key, sm.index, slot, self.now))
         self._push(self.now + duration, _BLOCK_END, (run.key, sm.index, slot))
         if self.trace is not None:
             self.trace.append(BlockRecord(
                 run.key, sm.index, slot, self.now, self.now + duration))
-
-    # ------------------------------------------------------------- plumbing
-    def _sync_residency_caps(self) -> None:
-        """Propagate the policy's current residency caps into the predictor
-        (Section 3.4.3: residency changes start a new slice)."""
-        for key in self.active_keys():
-            run = self.runs[key]
-            for sm in range(self.n_sm):
-                cap = min(run.spec.max_residency,
-                          self.policy.residency_cap(key, sm))
-                self.predictor.on_residency_change(key, sm, cap)
-
-    def elapsed(self, key: str) -> float:
-        return self.now - self.runs[key].arrival_time
-
-    def oracle_runtime(self, key: str) -> Optional[float]:
-        run = self.runs[key]
-        return self.oracle_runtimes.get(run.spec.name)
 
 
 class _NoNoiseRNG:
@@ -375,11 +329,12 @@ def simulate(
     record_trace: bool = False,
     record_predictions: bool = False,
     oracle_runtimes: Optional[Dict[str, float]] = None,
+    predictor: Union[str, Predictor, None] = None,
 ) -> SimResult:
     sim = Simulator(
         arrivals, policy_factory(), n_sm=n_sm, seed=seed,
         record_trace=record_trace, record_predictions=record_predictions,
-        oracle_runtimes=oracle_runtimes)
+        oracle_runtimes=oracle_runtimes, predictor=predictor)
     return sim.run()
 
 

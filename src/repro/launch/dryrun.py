@@ -30,6 +30,7 @@ from pathlib import Path
 
 import jax
 
+from repro.core.predictor import staircase_runtime
 from repro.configs import ARCHS, SHAPES, get_arch
 from repro.configs.shapes import SHAPE_ORDER, shape_applicable
 from repro.launch.mesh import make_production_mesh
@@ -218,7 +219,8 @@ def main() -> None:
 
     mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
     failures = 0
-    for arch, shape in cells:
+    done = 0
+    for i, (arch, shape) in enumerate(cells):
         path = args.out / mesh_name / f"{arch}__{shape}.json"
         if args.skip_existing and path.exists():
             st = json.loads(path.read_text()).get("status")
@@ -226,8 +228,21 @@ def main() -> None:
                 print(f"[dryrun] skip existing {arch} {shape} ({st})",
                       flush=True)
                 continue
+        t_cell0 = time.time()
         try:
             run_cell(arch, shape, args.multi_pod, args.out)
+            done += 1
+            remaining = len(cells) - i - 1
+            if done == 1 and remaining:
+                # Structural runtime prediction for the sweep itself: the
+                # cells are this driver's homogeneous "blocks" (Eq. 1 with
+                # R=1 compile lane) — profile one, extrapolate the rest
+                # (an upper bound: later cells may be skipped).
+                t_cell = time.time() - t_cell0
+                pred = staircase_runtime(remaining, 1, t_cell)
+                print(f"[dryrun] predictor: t={t_cell:.1f}s/cell -> "
+                      f"<={pred:.0f}s for the up to {remaining} remaining "
+                      f"cells", flush=True)
         except Exception:
             failures += 1
             print(f"[dryrun] FAILED {arch} {shape}", flush=True)

@@ -1,9 +1,20 @@
 """Concurrent serving driver — the paper's scenario on the serving side.
 
 Multiple decode jobs (request batches with different generation lengths)
-share the machine under a thread-block-style scheduling policy.  The Simple
-Slicing predictor profiles each job's first decode chunk and SRTF runs the
-predicted-shortest job first, preempting at chunk boundaries.
+share the machine under a thread-block-style scheduling policy.  Jobs are
+submitted **asynchronously** through the multi-tenant
+:class:`repro.core.scheduler_service.SchedulerService`: each arrives
+``--stagger`` seconds after the previous one while the machine is already
+running — the dynamic-arrival path the production story needs, not a fixed
+up-front job list.  The structural predictor profiles each job's first
+decode chunk and SRTF runs the predicted-shortest job first, preempting at
+chunk boundaries; STP/ANTT are reported per tenant (one tenant per arch).
+
+Key convention: job keys are ``{arch}#{order}`` — the text before the last
+``#`` is the arch/tenant name (recover it with ``key.rsplit("#", 1)[0]``),
+the number after is the machine-wide submission order.  Solo baselines are
+measured once per distinct (arch, blocks) item and mapped to job keys at
+submission time.
 
 Example::
 
@@ -14,51 +25,90 @@ Example::
 from __future__ import annotations
 
 import argparse
+import asyncio
+from typing import Dict, List, Tuple
 
 from repro.configs import ARCHS, get_arch
 from repro.core.executor import LaneExecutor
 from repro.core.jobs import make_serve_job
 from repro.core.metrics import evaluate
 from repro.core.policies import make_policy
+from repro.core.scheduler_service import SchedulerService
 
 
-def build_jobs(args):
-    jobs = []
-    for i, item in enumerate(args.jobs.split(",")):
-        arch_id, _, blocks = item.partition(":")
-        cfg = get_arch(arch_id).reduced()
-        jobs.append(make_serve_job(
-            cfg, arch_id, blocks=int(blocks or 8),
-            tokens_per_block=args.tokens_per_block, batch=args.batch,
-            prompt_len=args.prompt_len, max_residency=args.lanes,
-            seed=args.seed + i, arrival=0.02 * i))
-    return jobs
-
-
-def run_policy(args, policy: str):
-    solo = {}
+def parse_jobs(args) -> List[Tuple[str, int]]:
+    out = []
     for item in args.jobs.split(","):
         arch_id, _, blocks = item.partition(":")
-        job = make_serve_job(
-            get_arch(arch_id).reduced(), arch_id, blocks=int(blocks or 8),
-            tokens_per_block=args.tokens_per_block, batch=args.batch,
-            prompt_len=args.prompt_len, max_residency=args.lanes,
-            seed=args.seed)
+        out.append((arch_id, int(blocks or 8)))
+    return out
+
+
+def build_job(args, arch_id: str, blocks: int, seed: int):
+    return make_serve_job(
+        get_arch(arch_id).reduced(), arch_id, blocks=blocks,
+        tokens_per_block=args.tokens_per_block, batch=args.batch,
+        prompt_len=args.prompt_len, max_residency=args.lanes,
+        seed=seed, tenant=arch_id)
+
+
+def measure_solo(args) -> Dict[Tuple[str, int], float]:
+    """Measured isolated runtime per (arch, blocks) — the STP/ANTT baseline.
+
+    One warmed job object per distinct (arch, blocks) item, measured once
+    and reused by every policy run: rebuilding a job per policy would
+    re-trace and re-JIT its step functions and re-pay prefill, so the
+    baseline would drift between the ``--policy`` and ``--compare-fifo``
+    runs of the same invocation.  Keyed by (arch, blocks), not arch alone:
+    the same arch listed with a different decode length is a different
+    job and needs its own baseline.
+    """
+    solo: Dict[Tuple[str, int], float] = {}
+    for arch_id, blocks in parse_jobs(args):
+        if (arch_id, blocks) in solo:
+            continue                  # one baseline per distinct item
+        job = build_job(args, arch_id, blocks, args.seed)
         res = LaneExecutor([job], make_policy("fifo"),
                            n_lanes=args.lanes).run()
-        solo[arch_id] = next(iter(res.values())).turnaround
-    ex = LaneExecutor(build_jobs(args), make_policy(policy),
-                      n_lanes=args.lanes)
-    ex.oracle_runtimes.update(solo)
-    results = ex.run()
-    turnaround = {k: r.turnaround for k, r in results.items()}
-    solo_map = {k: solo[k.rsplit("#", 1)[0]] for k in turnaround}
-    m = evaluate(turnaround, solo_map)
+        solo[(arch_id, blocks)] = next(iter(res.values())).turnaround
+    return solo
+
+
+async def run_service(args, policy: str, solo: Dict[Tuple[str, int], float]):
+    """One policy run: staggered async submissions against a live service."""
+    service = SchedulerService(n_lanes=args.lanes, policy=policy,
+                               predictor=args.predictor)
+    try:
+        handles = []
+        solo_by_key: Dict[str, float] = {}
+        for i, (arch_id, blocks) in enumerate(parse_jobs(args)):
+            if i:
+                await asyncio.sleep(args.stagger)  # late arrival, busy machine
+            job = build_job(args, arch_id, blocks, args.seed + i)
+            handle = service.submit(job, tenant=arch_id,
+                                    solo_runtime=solo[(arch_id, blocks)])
+            solo_by_key[handle.key] = solo[(arch_id, blocks)]
+            handles.append(handle)
+        results = [await h.result() for h in handles]
+    finally:
+        service.close()
+
+    turnaround = {r.key: r.turnaround for r in results}
+    m = evaluate(turnaround, solo_by_key)
     print(f"[serve] policy={policy:14s} STP={m.stp:.3f} ANTT={m.antt:.3f} "
           f"fairness={m.fairness:.3f}")
-    for k, r in sorted(results.items()):
-        print(f"    {k}: turnaround={r.turnaround:.2f}s")
+    for tenant, info in sorted(service.tenant_report().items()):
+        tm = info["metrics"]
+        if tm is not None:
+            print(f"    tenant={tenant}: jobs={info['jobs']} "
+                  f"STP={tm['stp']:.3f} ANTT={tm['antt']:.3f}")
+    for r in sorted(results, key=lambda r: r.key):
+        print(f"    {r.key}: turnaround={r.turnaround:.2f}s")
     return m
+
+
+def run_policy(args, policy: str, solo: Dict[Tuple[str, int], float]):
+    return asyncio.run(run_service(args, policy, solo))
 
 
 def main() -> None:
@@ -66,16 +116,21 @@ def main() -> None:
     ap.add_argument("--jobs", default="yi-6b:24,minicpm3-4b:6",
                     help="arch:decode_blocks,...")
     ap.add_argument("--policy", default="srtf")
+    ap.add_argument("--predictor", default="simple-slicing",
+                    help="registered predictor name (simple-slicing, ewma)")
     ap.add_argument("--compare-fifo", action="store_true")
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens-per-block", type=int, default=8)
+    ap.add_argument("--stagger", type=float, default=0.02,
+                    help="seconds between async job submissions")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    m = run_policy(args, args.policy)
+    solo = measure_solo(args)
+    m = run_policy(args, args.policy, solo)
     if args.compare_fifo and args.policy != "fifo":
-        mf = run_policy(args, "fifo")
+        mf = run_policy(args, "fifo", solo)
         print(f"[serve] {args.policy} vs fifo: STP {m.stp / mf.stp:.2f}x, "
               f"ANTT {mf.antt / m.antt:.2f}x")
 

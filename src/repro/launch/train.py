@@ -107,21 +107,32 @@ def train_multi(args) -> None:
         specs.append(make_train_job(
             cfg, arch_id, blocks=int(blocks or 20), batch=args.batch,
             seq=args.seq, max_residency=args.lanes, seed=args.seed + i,
-            arrival=0.05 * i))
+            arrival=0.05 * i, tenant=arch_id))
+    # Solo baselines: one warmed job per distinct (arch, blocks) item,
+    # measured once.  Job keys are "{arch}#{order}"; split on the last '#'
+    # to recover the arch.
     solo = {}
-    for js in specs:
+    blocks_of = {}
+    for order, js in enumerate(specs):
+        blocks_of[f"{js.name}#{order}"] = js.num_blocks
+        if (js.name, js.num_blocks) in solo:
+            continue
         fresh = make_train_job(
             ARCHS[js.name].reduced(), js.name, blocks=js.num_blocks,
             batch=args.batch, seq=args.seq, max_residency=args.lanes,
             seed=args.seed)
-        solo[js.name] = LaneExecutor(
+        res = LaneExecutor(
             [fresh], make_policy("fifo"), n_lanes=args.lanes).run()
-        solo[js.name] = next(iter(solo[js.name].values())).turnaround
-    ex = LaneExecutor(specs, make_policy(args.policy), n_lanes=args.lanes)
-    ex.oracle_runtimes.update(solo)
+        solo[(js.name, js.num_blocks)] = next(iter(res.values())).turnaround
+    ex = LaneExecutor(specs, make_policy(args.policy), n_lanes=args.lanes,
+                      predictor=args.predictor)
+    # SJF-style oracles are per kernel name; use the first item's baseline.
+    for (name, _), rt in solo.items():
+        ex.oracle_runtimes.setdefault(name, rt)
     results = ex.run()
     turnaround = {k: r.turnaround for k, r in results.items()}
-    solo_map = {k: solo[k.rsplit("#", 1)[0]] for k in turnaround}
+    solo_map = {k: solo[(k.rsplit("#", 1)[0], blocks_of[k])]
+                for k in turnaround}
     m = evaluate(turnaround, solo_map)
     print(f"[multi] policy={args.policy} STP={m.stp:.3f} ANTT={m.antt:.3f} "
           f"fairness={m.fairness:.3f}")
@@ -135,6 +146,8 @@ def main() -> None:
     ap.add_argument("--jobs", default=None,
                     help="multi-job mode: arch:blocks,arch:blocks,...")
     ap.add_argument("--policy", default="srtf")
+    ap.add_argument("--predictor", default="simple-slicing",
+                    help="registered predictor name (simple-slicing, ewma)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)

@@ -1,0 +1,78 @@
+"""Generate the golden-trace fixture for the scheduler regression suite.
+
+Run from the repo root::
+
+    PYTHONPATH=src python tests/make_golden_traces.py
+
+Writes ``tests/data/golden_traces.json``: for every (workload, policy) cell
+a fingerprint of the exact DES schedule — per-kernel finish times, the
+makespan, the number of executed blocks, and a CRC32 over the full block
+trace (kernel, sm, slot, start, end).  The fixture was generated from the
+pre-`Machine`-protocol seed scheduler; ``tests/test_golden_traces.py``
+asserts the redesigned core reproduces every schedule bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import json
+import zlib
+from pathlib import Path
+
+from repro.core.policies import POLICIES, make_policy
+from repro.core.simulator import simulate
+from repro.core.workload import Arrival, ERCBENCH, TABLE3_RUNTIME
+
+#: Small but structurally diverse workloads: short+short, long+short (the
+#: FIFO-pessimal order), staggered/startup kernels, and a 3-program mix.
+WORKLOADS = {
+    "jpegd+aesd": [("JPEG-d", 0.0), ("AES-d", 100.0)],
+    "ray+jpege": [("RayTracing", 0.0), ("JPEG-e", 100.0)],
+    "sha1+sad": [("SHA1", 0.0), ("SAD", 100.0)],
+    "aesd+jpegd+ray": [("JPEG-d", 0.0), ("AES-d", 50.0), ("RayTracing", 100.0)],
+}
+
+SEED = 0
+
+
+def _arrivals(pairs):
+    return [Arrival(ERCBENCH[name], t, uid=f"{name}#{i}")
+            for i, (name, t) in enumerate(pairs)]
+
+
+def trace_fingerprint(trace) -> int:
+    text = "|".join(
+        f"{r.kernel},{r.sm},{r.slot},{r.start:.4f},{r.end:.4f}" for r in trace)
+    return zlib.crc32(text.encode())
+
+
+def build() -> dict:
+    out = {}
+    for wl_name, pairs in WORKLOADS.items():
+        for policy_name in sorted(POLICIES):
+            res = simulate(
+                _arrivals(pairs),
+                lambda policy_name=policy_name: make_policy(policy_name),
+                seed=SEED,
+                record_trace=True,
+                oracle_runtimes=dict(TABLE3_RUNTIME),
+            )
+            out[f"{wl_name}/{policy_name}"] = {
+                "finish": {k: round(v, 4) for k, v in res.finish.items()},
+                "makespan": round(res.makespan, 4),
+                "n_blocks": len(res.sim.trace),
+                "trace_crc32": trace_fingerprint(res.sim.trace),
+            }
+    return out
+
+
+def main() -> None:
+    data = {"seed": SEED, "workloads": {k: v for k, v in WORKLOADS.items()},
+            "cells": build()}
+    path = Path(__file__).parent / "data" / "golden_traces.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {path} ({len(data['cells'])} cells)")
+
+
+if __name__ == "__main__":
+    main()

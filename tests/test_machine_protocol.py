@@ -1,0 +1,205 @@
+"""Protocol-conformance suite for the SchedulerCore / Machine redesign.
+
+Asserts that both concrete machines (DES simulator, real-JAX lane executor)
+satisfy the :class:`repro.core.machine.Machine` protocol, that every policy
+runs correctly when it can ONLY see the protocol surface (a restricted
+proxy hides machine internals), and that the typed decision/event objects
+behave as documented.
+"""
+
+import inspect
+from pathlib import Path
+
+import pytest
+
+from repro.core.events import (
+    Decision,
+    Hold,
+    IssueGrant,
+    PreemptAtBoundary,
+    SampleOnSM,
+    grants_issue,
+)
+from repro.core.executor import ExecutorJob, LaneExecutor
+from repro.core.machine import Machine, SchedulerCore
+from repro.core.policies import POLICIES, make_policy
+from repro.core.predictor import (
+    EWMAPredictor,
+    PREDICTORS,
+    Predictor,
+    SimpleSlicingPredictor,
+    make_predictor,
+)
+from repro.core.simulator import Simulator, simulate
+from repro.core.workload import Arrival, ERCBENCH, KernelSpec
+
+
+def small_spec(name="u", blocks=24, residency=4, t=1000.0):
+    return KernelSpec(name=name, num_blocks=blocks, max_residency=residency,
+                      threads_per_block=128, mean_t=t)
+
+
+def make_simulator(policy_name="fifo"):
+    arrivals = [Arrival(small_spec("a", 24), 0.0, uid="a#0"),
+                Arrival(small_spec("b", 12, t=400.0), 10.0, uid="b#1")]
+    return Simulator(arrivals, make_policy(policy_name), n_sm=4)
+
+
+def dummy_job(name, blocks):
+    def mk(residency):
+        def block():
+            pass
+        return block
+    return ExecutorJob(name=name, num_blocks=blocks, max_residency=4,
+                       make_block_fn=mk)
+
+
+def make_executor(policy_name="fifo"):
+    return LaneExecutor([dummy_job("a", 6), dummy_job("b", 3)],
+                        make_policy(policy_name), n_lanes=4)
+
+
+# ------------------------------------------------------------- conformance
+@pytest.mark.parametrize("factory", [make_simulator, make_executor],
+                         ids=["simulator", "executor"])
+def test_machines_satisfy_protocol(factory):
+    machine = factory()
+    assert isinstance(machine, Machine)
+    # the protocol surface is live, not just present
+    assert machine.n_sm == 4
+    assert machine.now == 0.0
+    assert isinstance(machine.predictor, Predictor)
+    assert isinstance(machine.core, SchedulerCore)
+    key = next(iter(machine.runs))
+    assert machine.run_state(key).key == key
+    assert isinstance(machine.can_fit(key, 0), bool)
+    assert machine.residency(key, 0) == 0
+    assert machine.oracle_runtime(key) is None
+    machine.sync_residency_caps()      # must not throw before any launch
+
+
+@pytest.mark.parametrize("factory", [make_simulator, make_executor],
+                         ids=["simulator", "executor"])
+def test_machines_share_one_scheduling_core(factory):
+    machine = factory()
+    assert machine.core.policy is machine.policy
+    assert machine.core.predictor is machine.predictor
+    assert machine.core.machine is machine
+
+
+class _RestrictedMachine:
+    """Proxy exposing ONLY the Machine protocol surface.
+
+    Any access outside it raises, so a policy that pokes machine internals
+    (the old ``sim.runs[...]`` / ``sim.sms[...]`` duck-type) fails loudly.
+    """
+
+    _ALLOWED = ("n_sm", "predictor", "active_keys", "run_state", "residency",
+                "can_fit", "elapsed", "oracle_runtime", "sync_residency_caps")
+
+    def __init__(self, machine):
+        object.__setattr__(self, "_machine", machine)
+
+    @property
+    def now(self):
+        return self._machine.now
+
+    def __getattr__(self, name):
+        if name in self._ALLOWED:
+            return getattr(self._machine, name)
+        raise AttributeError(
+            f"policy touched non-protocol machine attribute {name!r}")
+
+
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+def test_policies_use_only_the_protocol(policy_name):
+    arrivals = [Arrival(ERCBENCH["JPEG-d"], 0.0, uid="JPEG-d#0"),
+                Arrival(ERCBENCH["JPEG-e"], 100.0, uid="JPEG-e#1")]
+    sim = Simulator(arrivals, make_policy(policy_name),
+                    oracle_runtimes={"JPEG-d": 1.0, "JPEG-e": 2.0})
+    # rebind the policy to a proxy that hides everything non-protocol
+    sim.policy.machine = _RestrictedMachine(sim)
+    res = sim.run()
+    assert len(res.turnaround) == 2
+
+
+def test_no_ducktype_access_in_core_source():
+    """The acceptance grep: no `sim.sms[` / `sim.runs[` outside machines."""
+    core = Path(__file__).resolve().parents[1] / "src" / "repro" / "core"
+    for fname in ("policies.py", "predictor.py"):
+        text = (core / fname).read_text()
+        assert "sim.sms[" not in text, fname
+        assert "sim.runs[" not in text, fname
+        assert ".sim." not in text, fname
+
+
+# ---------------------------------------------------------- typed decisions
+def test_srtf_emits_typed_decisions():
+    arrivals = [Arrival(ERCBENCH["RayTracing"], 0.0, uid="RayTracing#0"),
+                Arrival(ERCBENCH["JPEG-d"], 100.0, uid="JPEG-d#1")]
+    sim = Simulator(arrivals, make_policy("srtf"), record_decisions=True)
+    sim.run()
+    kinds = {type(d) for _, _, d in sim.decisions}
+    assert IssueGrant in kinds
+    assert Hold in kinds
+    assert SampleOnSM in kinds          # the late kernel was sampled
+    # every recorded decision is one of the typed variants
+    assert kinds <= {IssueGrant, Hold, SampleOnSM, PreemptAtBoundary}
+    # sampling decisions happen only on the sampling SM
+    sample_sms = {sm for _, sm, d in sim.decisions
+                  if isinstance(d, SampleOnSM)}
+    assert sample_sms == {sim.policy.sample_sm}
+
+
+def test_preempt_at_boundary_decision_drains_not_backfills():
+    # A long kernel occupies the machine; a short one arrives and wins SRTF.
+    # While the long kernel's blocks drain, the policy must answer
+    # PreemptAtBoundary (wait) rather than Hold or a backfill grant.
+    long_k = small_spec("long", blocks=64, residency=4, t=1000.0)
+    short_k = small_spec("short", blocks=8, residency=4, t=100.0)
+    sim = Simulator([Arrival(long_k, 0.0, uid="long#0"),
+                     Arrival(short_k, 500.0, uid="short#1")],
+                    make_policy("srtf"), n_sm=2, record_decisions=True)
+    sim.run()
+    preempts = [d for _, _, d in sim.decisions
+                if isinstance(d, PreemptAtBoundary)]
+    assert preempts, "expected drain decisions while the winner waited"
+    assert all(grants_issue(d) is None for d in preempts)
+
+
+def test_grants_issue_mapping():
+    assert grants_issue(IssueGrant("k")) == "k"
+    assert grants_issue(SampleOnSM("k")) == "k"
+    assert grants_issue(Hold("idle")) is None
+    assert grants_issue(PreemptAtBoundary("k")) is None
+
+
+# ------------------------------------------------------- predictor registry
+def test_predictor_registry_contents():
+    assert "simple-slicing" in PREDICTORS
+    assert "ewma" in PREDICTORS
+    assert isinstance(make_predictor(None, 4), SimpleSlicingPredictor)
+    assert isinstance(make_predictor("ewma", 4), EWMAPredictor)
+    inst = SimpleSlicingPredictor(3)
+    assert make_predictor(inst, 99) is inst
+    with pytest.raises(ValueError):
+        make_predictor("nope", 4)
+
+
+def test_simulator_runs_with_alternate_predictor():
+    arrivals = [Arrival(ERCBENCH["JPEG-d"], 0.0, uid="JPEG-d#0"),
+                Arrival(ERCBENCH["JPEG-e"], 100.0, uid="JPEG-e#1")]
+    res_ss = simulate(arrivals, lambda: make_policy("srtf"), seed=0)
+    res_ew = simulate(arrivals, lambda: make_policy("srtf"), seed=0,
+                      predictor="ewma")
+    assert set(res_ew.turnaround) == set(res_ss.turnaround)
+    assert all(v > 0 for v in res_ew.turnaround.values())
+
+
+def test_predictor_interface_is_abstract():
+    with pytest.raises(TypeError):
+        Predictor(4)                     # abstract methods unimplemented
+    # the ABC names the full Algorithm-1 event surface
+    for method in ("on_launch", "on_block_start", "on_block_end",
+                   "on_kernel_end", "on_residency_change"):
+        assert getattr(Predictor, method).__isabstractmethod__

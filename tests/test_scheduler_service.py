@@ -1,0 +1,181 @@
+"""Tests for the async multi-tenant SchedulerService and the dynamic
+(late-arrival) LaneExecutor surface it builds on.
+
+Jobs here are cheap sleep/no-op blocks — no JAX — so the suite exercises
+submission, SRTF ordering, late arrival, cancellation and per-tenant
+metrics quickly and deterministically enough to assert on.
+"""
+
+import asyncio
+import time
+
+import pytest
+
+from repro.core.executor import ExecutorJob, LaneExecutor
+from repro.core.policies import make_policy
+from repro.core.scheduler_service import (
+    JobCancelled,
+    JobHandle,
+    SchedulerService,
+)
+
+
+def sleep_job(name, blocks, per_block=0.002, tenant=None):
+    def mk(residency):
+        def block():
+            time.sleep(per_block)
+        return block
+    return ExecutorJob(name=name, num_blocks=blocks, max_residency=4,
+                       make_block_fn=mk, tenant=tenant)
+
+
+# ------------------------------------------------------- dynamic executor
+def test_add_job_while_running():
+    ex = LaneExecutor([sleep_job("first", 4)], make_policy("fifo"),
+                      n_lanes=2)
+    # drain a few events, then inject a late job mid-run
+    assert ex.step()
+    key = ex.add_job(sleep_job("late", 2))
+    assert key == "late#1"
+    assert ex.runs[key].arrival_time >= 0.0
+    results = ex.run()
+    assert set(results) == {"first#0", "late#1"}
+    assert all(not r.cancelled for r in results.values())
+
+
+def test_executor_cancel_at_boundary():
+    ex = LaneExecutor([sleep_job("victim", 50), sleep_job("other", 3)],
+                      make_policy("fifo"), n_lanes=2)
+    for _ in range(6):
+        ex.step()
+    done_at_cancel = ex.runs["victim#0"].done
+    assert ex.cancel("victim#0")
+    assert not ex.cancel("victim#0")      # already finished
+    results = ex.run()
+    assert results["victim#0"].cancelled
+    # no further blocks issued after the boundary (in-flight ones may land)
+    assert ex.runs["victim#0"].done <= done_at_cancel + ex.n_lanes
+    assert not results["other#1"].cancelled
+
+
+def test_cancel_before_arrival_never_launches():
+    # A job cancelled before its queued arrival event fires must not be
+    # registered with the predictor (no state leak, no spurious reslice of
+    # co-runners) nor scheduled.
+    ex = LaneExecutor([sleep_job("live", 4)], make_policy("fifo"), n_lanes=2)
+    doomed = ex.add_job(sleep_job("doomed", 8))
+    assert ex.cancel(doomed)
+    results = ex.run()
+    assert results[doomed].cancelled and results[doomed].blocks == 0
+    assert not ex.predictor.has_kernel(doomed)
+    assert ex.runs[doomed].issued == 0
+    assert not results["live#0"].cancelled
+
+
+def test_duplicate_job_key_rejected():
+    ex = LaneExecutor([], make_policy("fifo"), n_lanes=2)
+    ex.add_job(sleep_job("a", 1), key="a#0")
+    with pytest.raises(ValueError):
+        ex.add_job(sleep_job("a", 1), key="a#0")
+
+
+# ------------------------------------------------------------- the service
+def test_async_staggered_submissions_complete_under_srtf():
+    async def scenario():
+        service = SchedulerService(n_lanes=4, policy="srtf")
+        h_long = service.submit(sleep_job("long", 12, per_block=0.005),
+                                tenant="team-a")
+        await service.wait_until_busy()   # machine is provably running
+        h_short = service.submit(sleep_job("short", 3), tenant="team-b")
+        assert isinstance(h_long, JobHandle) and isinstance(h_short, JobHandle)
+        r_long = await h_long.result()
+        r_short = await h_short.result()
+        service.close()
+        return service, r_long, r_short
+
+    service, r_long, r_short = asyncio.run(scenario())
+    assert r_long.blocks == 12 and r_short.blocks == 3
+    assert r_long.key == "long#0" and r_short.key == "short#1"
+    # the short job arrived late: its arrival is after the machine started
+    assert r_short.arrival > 0.0
+    report = service.tenant_report()
+    assert set(report) == {"team-a", "team-b"}
+    for tenant in ("team-a", "team-b"):
+        m = report[tenant]["metrics"]
+        assert m is not None and m["stp"] > 0 and m["antt"] > 0
+
+
+def test_solo_hint_vs_structural_estimate():
+    async def scenario():
+        service = SchedulerService(n_lanes=2, policy="fifo")
+        h1 = service.submit(sleep_job("hinted", 4), tenant="hinted",
+                            solo_runtime=0.004)
+        h2 = service.submit(sleep_job("estimated", 4), tenant="estimated")
+        await h1.result()
+        await h2.result()
+        service.close()
+        return service
+
+    service = asyncio.run(scenario())
+    report = service.tenant_report()
+    assert not report["hinted"]["solo_estimated"]
+    assert report["estimated"]["solo_estimated"]
+    assert report["estimated"]["metrics"]["antt"] > 0
+
+
+def test_cancellation_raises_and_is_counted():
+    async def scenario():
+        service = SchedulerService(n_lanes=2, policy="fifo")
+        h_doomed = service.submit(sleep_job("doomed", 500), tenant="t")
+        h_ok = service.submit(sleep_job("ok", 2), tenant="t")
+        await asyncio.sleep(0.02)
+        h_doomed.cancel()
+        ok = await h_ok.result()
+        with pytest.raises(JobCancelled):
+            await h_doomed.result()
+        service.close()
+        return service, ok
+
+    service, ok = asyncio.run(scenario())
+    assert not ok.cancelled
+    report = service.tenant_report()
+    assert report["t"]["cancelled"] == 1
+    assert report["t"]["jobs"] == 1
+
+
+def test_close_rejects_new_submissions_and_drain_collects():
+    async def scenario():
+        service = SchedulerService(n_lanes=2, policy="fifo")
+        service.submit(sleep_job("a", 2), tenant="x")
+        service.submit(sleep_job("b", 2), tenant="x")
+        results = await service.drain()
+        await service.aclose()
+        with pytest.raises(RuntimeError):
+            service.submit(sleep_job("c", 1))
+        return results
+
+    results = asyncio.run(scenario())
+    assert {r.key for r in results} == {"a#0", "b#1"}
+
+
+def test_close_with_cancel_pending_abandons_work():
+    service = SchedulerService(n_lanes=2, policy="fifo")
+    handle = service.submit(sleep_job("endless", 100000), tenant="t")
+    time.sleep(0.02)
+    service.close(cancel_pending=True)
+    with pytest.raises(JobCancelled):
+        handle.result_blocking(timeout=5)
+
+
+def test_tenant_defaults_to_job_tenant_then_name():
+    async def scenario():
+        service = SchedulerService(n_lanes=2, policy="fifo")
+        h1 = service.submit(sleep_job("named", 1, tenant="from-job"))
+        h2 = service.submit(sleep_job("anon", 1))
+        await h1.result()
+        await h2.result()
+        service.close()
+        return service
+
+    service = asyncio.run(scenario())
+    assert set(service.tenant_report()) == {"from-job", "anon"}
