@@ -1,21 +1,35 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: check test smoke golden
+.PHONY: check check-all test test-all smoke smoke-sweep golden
 
+# Fast tier (default): deselects @pytest.mark.slow (golden-trace sweep
+# regression, full Table-5 cells, 8-device distributed run).
 test:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# Everything, including the slow markers.
+test-all:
+	$(PY) -m pytest -x -q
 
 # Tiny-config end-to-end smokes: the DES benchmarks that need no JAX
 # compilation, plus the async serving path (real jitted steps, reduced
 # configs).
 smoke:
-	$(PY) -m benchmarks.run fig01 fig04 table5
+	$(PY) -m benchmarks.run fig01 fig04 table5 --jobs 2
 	$(PY) -m repro.launch.serve --jobs yi-6b:4,minicpm3-4b:2 \
 	    --policy srtf --compare-fifo \
 	    --tokens-per-block 4 --prompt-len 8 --batch 1
 
+# Sweep-runner smoke on a cheap subset: exercises the multiprocess fan-out
+# and the on-disk cache without the full 56-pair grid.
+smoke-sweep:
+	$(PY) -m benchmarks.run fig01 table5 scenarios --jobs 2 --subset 4 \
+	    --no-cache
+
 check: test smoke
+
+check-all: test-all smoke smoke-sweep
 
 # Regenerate the golden-trace fixture (ONLY when a schedule change is
 # intended and reviewed; tests/test_golden_traces.py pins the current one).

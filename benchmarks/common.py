@@ -1,52 +1,102 @@
 """Shared helpers for the paper-reproduction benchmarks.
 
-Caches expensive shared artifacts (solo runtimes, the full Table-5 policy
-sweep) so that the per-figure benchmark modules stay cheap.
+The sweep-shaped benchmarks (Table 5, Table 6, Figs. 1/14/15/16, the
+open-loop scenario rows) are thin views over :mod:`repro.core.sweep`: each
+declares one :class:`~repro.core.sweep.SweepSpec` and renders rows from the
+shared :class:`~repro.core.sweep.SweepResult`.  Parallelism and the
+on-disk result cache are configured once per invocation from
+``benchmarks.run`` flags via :func:`configure` (``--jobs``,
+``--cache-dir``, ``--subset``); a warm cache turns the full table sweeps
+into second-scale reruns.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Dict, List, Tuple
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import (
-    ERCBENCH,
     Arrival,
+    ERCBENCH,
+    PARBOIL2_LIKE,
+    SweepResult,
+    SweepSpec,
     evaluate,
     make_policy,
+    run_sweep,
     simulate,
-    solo_runtime,
-    summarize,
+    solo_runtime_cached,
 )
 from repro.core.metrics import WorkloadMetrics
-from repro.core.workload import reorder_for_oracle, two_program_workloads
+from repro.core.scenarios import PairStagger, Scenario
+from repro.core.workload import reorder_for_oracle
 
 SEED = 0
 
-#: Synthetic "Parboil2-like" kernels used where the paper also evaluates
-#: Parboil2 (Figs. 3/4).  Grid shapes chosen to mimic the named kernels'
-#: published structure; durations are arbitrary but the *structure*
-#: (many uniform blocks / staggered / value-dependent) is what is tested.
-PARBOIL2_LIKE = {
-    "SGEMM": dict(num_blocks=528, max_residency=6, threads_per_block=128,
-                  mean_t=80_000.0, rsd=0.03),
-    "LBM": dict(num_blocks=18_000, max_residency=6, threads_per_block=120,
-                mean_t=12_000.0, rsd=0.05, stagger_frac=0.4,
-                stagger_sm_prob=1.0),
-    "CUTCP": dict(num_blocks=121, max_residency=8, threads_per_block=128,
-                  mean_t=150_000.0, rsd=0.30),
-    "HISTO": dict(num_blocks=2_042, max_residency=8, threads_per_block=192,
-                  mean_t=25_000.0, rsd=0.08, startup_factor=0.2),
-}
+#: Default on-disk sweep cache (content-addressed; safe to delete).
+DEFAULT_CACHE_DIR = Path("artifacts") / "sweep_cache"
+
+#: Runner configuration, set once per invocation by ``benchmarks.run``.
+JOBS = 1
+CACHE_DIR: Optional[Path] = DEFAULT_CACHE_DIR
+SUBSET: Optional[int] = None
+
+_UNSET = object()
+
+
+def configure(jobs: Optional[int] = None, cache_dir=_UNSET,
+              subset=_UNSET) -> None:
+    """Set sweep parallelism / cache / workload-subset for this process.
+
+    ``cache_dir=None`` disables the on-disk cache; ``subset=N`` truncates
+    every scenario's workload list to its first N entries (the CI smoke
+    uses this to keep sweep-runner coverage cheap).
+    """
+    global JOBS, CACHE_DIR, SUBSET
+    if jobs is not None:
+        JOBS = max(1, int(jobs))
+    if cache_dir is not _UNSET:
+        CACHE_DIR = Path(cache_dir) if cache_dir is not None else None
+    if subset is not _UNSET:
+        SUBSET = int(subset) if subset is not None else None
+
+
+class _SubsetScenario(Scenario):
+    """First-N-workloads view of another scenario (``--subset``)."""
+
+    def __init__(self, inner: Scenario, limit: int):
+        super().__init__(inner.seed)
+        self.inner = inner
+        self.limit = limit
+        self.name = inner.name
+
+    def reseeded(self, seed: int) -> "Scenario":
+        return _SubsetScenario(self.inner.reseeded(seed), self.limit)
+
+    def workloads(self):
+        return self.inner.workloads()[: self.limit]
+
+
+def sweep(scenarios, policies, predictors=(None,), seeds=(SEED,),
+          until=None) -> SweepResult:
+    """Run one sweep under the module's configuration (jobs/cache/subset)."""
+    scenarios = tuple(
+        s if SUBSET is None else _SubsetScenario(s, SUBSET)
+        for s in scenarios)
+    spec = SweepSpec(scenarios=scenarios, policies=tuple(policies),
+                     predictors=tuple(predictors), seeds=tuple(seeds),
+                     until=until)
+    return run_sweep(spec, jobs=JOBS, cache_dir=CACHE_DIR)
 
 
 @functools.lru_cache(maxsize=None)
 def solo_runtimes(seed: int = SEED) -> Dict[str, float]:
     return {
-        name: solo_runtime(spec, lambda: make_policy("fifo"), seed=seed)
+        name: solo_runtime_cached(spec, seed=seed, cache_dir=CACHE_DIR)
         for name, spec in ERCBENCH.items()
     }
 
@@ -54,7 +104,12 @@ def solo_runtimes(seed: int = SEED) -> Dict[str, float]:
 def run_workload(policy: str, wl: List[Arrival], seed: int = SEED,
                  **sim_kwargs):
     """Run one workload under one policy.  SJF/LJF are realized the way the
-    paper realizes them: FIFO with oracle-chosen arrival order."""
+    paper realizes them: FIFO with oracle-chosen arrival order.
+
+    (Direct, uncached single run — figure benchmarks that need the full
+    :class:`~repro.core.simulator.SimResult` use this; sweep-shaped tables
+    go through :func:`sweep`.)
+    """
     solo = solo_runtimes(seed)
     if policy in ("sjf", "ljf"):
         wl = reorder_for_oracle(wl, solo, longest_first=(policy == "ljf"))
@@ -73,21 +128,32 @@ def workload_metrics(policy: str, wl: List[Arrival],
 
 TABLE5_POLICIES = ("fifo", "mpmax", "srtf", "srtf-adaptive", "sjf")
 
+#: Every policy the Table-5 sweep executes (the zero-sampling variant rides
+#: in the same sweep so the whole table is one SweepSpec).
+TABLE5_SWEEP_POLICIES = TABLE5_POLICIES + ("srtf-zero", "ljf")
+
 
 @functools.lru_cache(maxsize=None)
+def table5_result(seed: int = SEED) -> SweepResult:
+    """The full Table-5 grid as one sweep: 56 pair-stagger workloads x all
+    policies (incl. the zero-sampling SRTF variant and LJF for Fig. 1)."""
+    return sweep((PairStagger(seed=seed),), TABLE5_SWEEP_POLICIES,
+                 seeds=(seed,))
+
+
 def table5_sweep(seed: int = SEED) -> Dict[str, List[Tuple[str, WorkloadMetrics]]]:
-    """All 56 two-program workloads x all Table-5 policies."""
-    workloads = two_program_workloads()
+    """Per-policy per-workload metrics view (Figs. 14/15/16, Table 5)."""
+    result = table5_result(seed)
     out: Dict[str, List[Tuple[str, WorkloadMetrics]]] = {}
-    for pol in TABLE5_POLICIES:
-        out[pol] = [(name, workload_metrics(pol, wl, seed=seed))
-                    for name, wl in workloads]
+    for pol in TABLE5_SWEEP_POLICIES:
+        out[pol] = [(c.workload, c.metrics)
+                    for c in result.select(policy=pol)]
     return out
 
 
 def table5_summary(seed: int = SEED) -> Dict[str, WorkloadMetrics]:
-    return {pol: summarize([m for _, m in rows])
-            for pol, rows in table5_sweep(seed).items()}
+    result = table5_result(seed)
+    return {pol: result.summary(policy=pol) for pol in TABLE5_SWEEP_POLICIES}
 
 
 def linear_fit_end_prediction(end_times: np.ndarray) -> float:
@@ -105,3 +171,9 @@ def fmt(x: float, nd: int = 3) -> str:
     if x is None or (isinstance(x, float) and math.isnan(x)):
         return "nan"
     return f"{x:.{nd}f}"
+
+
+def metric_row(prefix: str, m: WorkloadMetrics) -> Tuple[str, str]:
+    """Uniform ``name,derived`` row for an STP/ANTT/fairness triple."""
+    return (prefix,
+            f"stp={m.stp:.2f};antt={m.antt:.2f};fair={m.fairness:.2f}")

@@ -20,6 +20,8 @@ from repro.core.jobs import make_serve_job, make_train_job
 from repro.core.metrics import evaluate
 from repro.core.policies import make_policy
 
+from .common import metric_row
+
 N_LANES = 4
 POLICY_NAMES = ("fifo", "mpmax", "srtf", "srtf-adaptive")
 
@@ -73,14 +75,10 @@ def run_impl():
                 solo[job.name] = _solo(b)
         for policy in POLICY_NAMES:
             m = _run_multi(builders, policy, solo)
-            rows.append((f"executor.{name}.{policy}",
-                         f"stp={m.stp:.2f};antt={m.antt:.2f};"
-                         f"fair={m.fairness:.2f}"))
+            rows.append(metric_row(f"executor.{name}.{policy}", m))
         if si == 0:
             m = _run_multi(builders, "srtf", solo, predictor="ewma")
-            rows.append((f"executor.{name}.srtf+ewma",
-                         f"stp={m.stp:.2f};antt={m.antt:.2f};"
-                         f"fair={m.fairness:.2f}"))
+            rows.append(metric_row(f"executor.{name}.srtf+ewma", m))
     rows.append(("executor.note",
                  "real jit step measurements; virtual lane time; paper "
                  "ordering SRTF>FIFO on STP/ANTT expected; srtf+ewma = "

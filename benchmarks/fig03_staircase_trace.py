@@ -11,10 +11,11 @@ Eq. 1 a gross underestimate while the execution remains linear.
 
 import numpy as np
 
-from repro.core import Arrival, KernelSpec, make_policy, simulate
+from repro.core import Arrival, KernelSpec, PARBOIL2_LIKE, make_policy, simulate
 from repro.core.predictor import staircase_runtime
+from repro.core.workload import scaled_spec
 
-from .common import PARBOIL2_LIKE, linear_fit_end_prediction
+from .common import linear_fit_end_prediction
 
 
 def _trace_one_sm(spec: KernelSpec, sm: int = 0):
@@ -32,7 +33,7 @@ def _trace_one_sm(spec: KernelSpec, sm: int = 0):
 
 
 def run():
-    base = KernelSpec("SGEMM", **PARBOIL2_LIKE["SGEMM"])
+    base = PARBOIL2_LIKE["SGEMM"]
     actual, eq1, linfit = _trace_one_sm(base)
     rows = [
         ("fig03.sgemm.linfit_err_pct", f"{100 * (linfit - actual) / actual:+.2f}"),
@@ -40,9 +41,8 @@ def run():
         ("fig03.paper", "linfit=+4.8;staircase=-6.04"),
     ]
     # Fig. 5: same kernel with staggered first-wave starts on every SM.
-    staggered = KernelSpec(
-        "SGEMM-staggered", **{**PARBOIL2_LIKE["SGEMM"],
-                              "stagger_frac": 0.6, "stagger_sm_prob": 1.0})
+    staggered = scaled_spec(base, name="SGEMM-staggered",
+                            stagger_frac=0.6, stagger_sm_prob=1.0)
     actual_s, eq1_s, linfit_s = _trace_one_sm(staggered)
     rows += [
         ("fig05.staggered.staircase_norm", f"{eq1_s / actual_s:.3f}"),

@@ -9,10 +9,17 @@ with staggered/startup kernels supplying the outliers.
 
 import numpy as np
 
-from repro.core import Arrival, ERCBENCH, KernelSpec, make_policy, simulate
+from repro.core import (
+    Arrival,
+    ERCBENCH,
+    KernelSpec,
+    PARBOIL2_LIKE,
+    make_policy,
+    simulate,
+)
 from repro.core.predictor import staircase_runtime
 
-from .common import PARBOIL2_LIKE, linear_fit_end_prediction
+from .common import linear_fit_end_prediction
 
 
 def _normalized_predictions(spec: KernelSpec, n_sm: int = 15, seed: int = 0):
@@ -52,7 +59,7 @@ def _suite_stats(specs):
 
 def run():
     erc = list(ERCBENCH.values())
-    parboil = [KernelSpec(n, **kw) for n, kw in PARBOIL2_LIKE.items()]
+    parboil = list(PARBOIL2_LIKE.values())
     erc_eq1, erc_lin = _suite_stats(erc)
     pb_eq1, pb_lin = _suite_stats(parboil)
     return [

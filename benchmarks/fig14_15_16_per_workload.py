@@ -1,10 +1,10 @@
 """Figures 14/15/16: per-workload STP, ANTT and fairness for all policies.
 
-Summarised here as win counts and extremes (the full 56-row sweep is shared
-with the Table 5 benchmark via a cache).  Paper: SRTF outperforms other
-non-SJF schedulers in nearly all workloads; worst FIFO ANTT is 425 (for
-SHA1+JPEG); MPMax's worst ANTT is ~10 because its reservations avoid
-hand-off delay.
+Summarised here as win counts and extremes (the full 56-row sweep is the
+same cached :class:`~repro.core.sweep.SweepResult` the Table 5 benchmark
+renders).  Paper: SRTF outperforms other non-SJF schedulers in nearly all
+workloads; worst FIFO ANTT is 425 (for SHA1+JPEG); MPMax's worst ANTT is
+~10 because its reservations avoid hand-off delay.
 """
 
 from .common import TABLE5_POLICIES, table5_sweep

@@ -5,13 +5,23 @@ the producing module's ``run()`` divided by the number of derived rows it
 emitted (all benchmarks are derived from simulation/lowering artifacts, not
 single-op microbenchmarks).
 
+Sweep-shaped modules execute through :mod:`repro.core.sweep`:
+
+* ``--jobs N``      — multiprocess fan-out over sweep cells,
+* ``--cache-dir D`` — content-addressed on-disk result cache (default
+  ``artifacts/sweep_cache``; ``--no-cache`` disables it),
+* ``--subset N``    — first N workloads of each scenario (CI smoke).
+
 Usage::
 
-    PYTHONPATH=src python -m benchmarks.run [module-substring ...]
+    PYTHONPATH=src python -m benchmarks.run [module-substring ...] \
+        [--jobs 4] [--cache-dir artifacts/sweep_cache | --no-cache] \
+        [--subset 4]
 """
 
 from __future__ import annotations
 
+import argparse
 import importlib
 import sys
 import time
@@ -28,17 +38,40 @@ MODULES = [
     "benchmarks.table5_policies",
     "benchmarks.fig14_15_16_per_workload",
     "benchmarks.table6_arrival_offsets",
+    "benchmarks.scenarios_openloop",
     "benchmarks.executor_policies",
     "benchmarks.roofline",
 ]
 
 
 def main() -> None:
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("filters", nargs="*",
+                    help="only run modules whose name contains a filter")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for sweep cells")
+    ap.add_argument("--cache-dir", default=None,
+                    help="sweep result cache directory "
+                         "(default artifacts/sweep_cache)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the on-disk sweep cache")
+    ap.add_argument("--subset", type=int, default=None,
+                    help="truncate each scenario to its first N workloads")
+    args = ap.parse_args()
+
+    from benchmarks import common
+    if args.no_cache:
+        common.configure(jobs=args.jobs, cache_dir=None, subset=args.subset)
+    elif args.cache_dir is not None:
+        common.configure(jobs=args.jobs, cache_dir=args.cache_dir,
+                         subset=args.subset)
+    else:
+        common.configure(jobs=args.jobs, subset=args.subset)
+
     print("name,us_per_call,derived")
     failures = 0
     for modname in MODULES:
-        if filters and not any(f in modname for f in filters):
+        if args.filters and not any(f in modname for f in args.filters):
             continue
         try:
             mod = importlib.import_module(modname)

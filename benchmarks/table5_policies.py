@@ -5,30 +5,21 @@ Paper: FIFO 1.35/3.66/0.19, MPMAX 1.37/2.15/0.36, SRTF 1.59/1.63/0.52,
 SRTF/ADAPTIVE 1.51/1.64/0.56, SJF 1.82/1.13/0.80.  Headline ratios:
 SRTF/FIFO = 1.18x STP, 2.25x ANTT; SRTF within 12.64% of SJF, bridging 49%
 of the FIFO->SJF gap; ADAPTIVE fairness 2.95x FIFO.
+
+The whole table — including the Section 6.2.2 zero-sampling experiment —
+is one :class:`~repro.core.sweep.SweepSpec` over the ``pair-stagger``
+scenario, executed by the cached parallel sweep runner.
 """
 
-from .common import TABLE5_POLICIES, table5_summary
+from .common import TABLE5_POLICIES, metric_row, table5_summary
 
 
 def run():
     s = table5_summary()
-    rows = []
-    for pol in TABLE5_POLICIES:
-        m = s[pol]
-        rows.append((f"table5.{pol}",
-                     f"stp={m.stp:.2f};antt={m.antt:.2f};fair={m.fairness:.2f}"))
+    rows = [metric_row(f"table5.{pol}", s[pol]) for pol in TABLE5_POLICIES]
     # Section 6.2.2 zero-sampling experiment: feed SRTF the true runtimes
     # (no sampling phase); the residual gap to SJF is pure hand-off delay.
-    from repro.core import evaluate, summarize
-    from repro.core.workload import two_program_workloads
-    from .common import run_workload, solo_runtimes
-    solo = solo_runtimes()
-    ms = []
-    for _, wl in two_program_workloads():
-        res = run_workload("srtf-zero", wl)
-        ms.append(evaluate(res.turnaround,
-                           {k: solo[res.name[k]] for k in res.turnaround}))
-    zero = summarize(ms)
+    zero = s["srtf-zero"]
     rows.append((
         "table5.srtf_zero_sampling",
         f"stp={zero.stp:.2f};antt={zero.antt:.2f};fair={zero.fairness:.2f} "

@@ -5,34 +5,36 @@ Paper (25%): FIFO 1.44/2.74/0.27, MPMAX 1.45/2.05/0.38, SRTF 1.62/1.60/0.53,
 ADAPTIVE 1.56/1.65/0.56.  (50%): FIFO 1.48/2.36/0.32, MPMAX 1.49/1.93/0.40,
 SRTF 1.63/1.56/0.55, ADAPTIVE 1.59/1.58/0.59.  Gaps shrink as kernels start
 farther apart.
+
+Both offset grids are one :class:`~repro.core.sweep.SweepSpec` over two
+``table6-offset`` scenarios (offsets computed from the simulator-measured
+solo runtimes), executed by the cached parallel sweep runner.
 """
 
-import itertools
+from repro.core import summarize
+from repro.core.scenarios import Table6Offset
 
-from repro.core import ERCBENCH, evaluate, summarize
-from repro.core.workload import offset_workload
-
-from .common import run_workload, solo_runtimes
+from .common import SEED, metric_row, solo_runtimes, sweep
 
 POLICIES = ("fifo", "mpmax", "srtf", "srtf-adaptive")
+FRACTIONS = (0.25, 0.50)
 
 
 def run():
-    solo = solo_runtimes()
+    solo = solo_runtimes(SEED)
+    scenarios = tuple(
+        Table6Offset(seed=SEED, offset_fraction=frac, solo=solo)
+        for frac in FRACTIONS)
+    result = sweep(scenarios, POLICIES)
     rows = []
-    for frac in (0.25, 0.50):
-        workloads = []
-        for a, b in itertools.permutations(sorted(ERCBENCH), 2):
-            workloads.append(offset_workload(a, b, frac, solo[a]))
+    for scn in scenarios:
         for pol in POLICIES:
-            ms = []
-            for wl in workloads:
-                res = run_workload(pol, wl)
-                solo_map = {k: solo[res.name[k]] for k in res.turnaround}
-                ms.append(evaluate(res.turnaround, solo_map))
-            m = summarize(ms)
-            rows.append((f"table6.offset{int(frac * 100)}.{pol}",
-                         f"stp={m.stp:.2f};antt={m.antt:.2f};fair={m.fairness:.2f}"))
+            cells = [c for c in result.select(policy=pol)
+                     if c.workload.endswith(scn.suffix)]
+            ms = [c.metrics for c in cells if c.metrics is not None]
+            rows.append(metric_row(
+                f"table6.offset{scn.suffix.lstrip('@')}.{pol}",
+                summarize(ms)))
     rows.append(("table6.paper",
                  "25%: srtf 1.62/1.60/0.53; 50%: srtf 1.63/1.56/0.55; gaps shrink"))
     return rows

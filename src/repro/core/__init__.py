@@ -23,7 +23,14 @@ Backend-independent core:
 * :mod:`repro.core.scheduler_service` — async multi-tenant submission API
   (``submit(job) -> handle``, late arrivals, cancellation, per-tenant
   metrics) over the lane executor.
-* :mod:`repro.core.metrics`   — STP / ANTT / StrictF.
+* :mod:`repro.core.metrics`   — STP / ANTT / StrictF, plus completion-window
+  metrics for open-loop/truncated runs.
+* :mod:`repro.core.scenarios` — registry of named, seeded arrival-process
+  generators (the paper's pair workloads, Table-6 offsets, open-loop
+  Poisson streams, bursty traffic, N-program mixes, trace replay).
+* :mod:`repro.core.sweep`     — declarative (scenario x policy x predictor
+  x seed) sweeps with multiprocess fan-out and a content-addressed
+  on-disk result cache.
 """
 
 from .events import (
@@ -40,7 +47,30 @@ from .events import (
     grants_issue,
 )
 from .machine import KernelRun, Machine, MachineBase, SchedulerCore
-from .metrics import WorkloadMetrics, evaluate, geomean, summarize
+from .metrics import (
+    MetricsError,
+    WindowMetrics,
+    WorkloadMetrics,
+    evaluate,
+    evaluate_window,
+    geomean,
+    summarize,
+)
+from .scenarios import (
+    SCENARIOS,
+    Scenario,
+    make_scenario,
+    register_scenario,
+    submission_offsets,
+    workload_digest,
+)
+from .sweep import (
+    CellResult,
+    SweepResult,
+    SweepSpec,
+    run_sweep,
+    solo_runtime_cached,
+)
 from .policies import (
     FIFO,
     LJF,
@@ -68,6 +98,7 @@ from .workload import (
     ERCBENCH,
     KernelSpec,
     N_SM,
+    PARBOIL2_LIKE,
     TABLE3_RUNTIME,
     two_program_workloads,
 )
@@ -76,6 +107,7 @@ __all__ = [
     "Arrival",
     "BlockEnded",
     "BlockStarted",
+    "CellResult",
     "Decision",
     "ERCBENCH",
     "EWMAPredictor",
@@ -91,32 +123,46 @@ __all__ = [
     "Machine",
     "MachineBase",
     "MachineEvent",
+    "MetricsError",
     "N_SM",
+    "PARBOIL2_LIKE",
     "POLICIES",
     "PREDICTORS",
     "Policy",
     "PreemptAtBoundary",
     "Predictor",
+    "SCENARIOS",
     "SJF",
     "SRTF",
     "SRTFAdaptive",
     "SampleOnSM",
+    "Scenario",
     "SchedulerCore",
     "SimResult",
     "SimpleSlicingPredictor",
     "Simulator",
+    "SweepResult",
+    "SweepSpec",
     "TABLE3_RUNTIME",
+    "WindowMetrics",
     "WorkloadMetrics",
     "evaluate",
+    "evaluate_window",
     "geomean",
     "grants_issue",
     "make_policy",
     "make_predictor",
+    "make_scenario",
     "register_predictor",
+    "register_scenario",
+    "run_sweep",
     "simulate",
     "solo_runtime",
+    "solo_runtime_cached",
     "staircase_blocks_in",
     "staircase_runtime",
+    "submission_offsets",
     "summarize",
     "two_program_workloads",
+    "workload_digest",
 ]

@@ -157,14 +157,9 @@ class SchedulerCore:
         return self
 
     def post(self, event: MachineEvent) -> Optional[float]:
-        if isinstance(event, KernelArrived):
-            run = self.machine.run_state(event.key)
-            run.launched = True
-            self.predictor.on_launch(
-                event.key, run.spec.num_blocks, run.spec.max_residency)
-            self.policy.on_arrival(event.key)
-            self.machine.sync_residency_caps()
-        elif isinstance(event, BlockStarted):
+        # Dispatch order: block events first — they dominate (two per
+        # executed block vs. two per kernel lifetime).
+        if isinstance(event, BlockStarted):
             self.predictor.on_block_start(
                 event.key, event.sm, event.slot, event.time)
         elif isinstance(event, BlockEnded):
@@ -177,6 +172,13 @@ class SchedulerCore:
                 event.key, event.sm, event.slot, event.time)
             self.policy.on_block_end(event.key, event.sm)
             return pred
+        elif isinstance(event, KernelArrived):
+            run = self.machine.run_state(event.key)
+            run.launched = True
+            self.predictor.on_launch(
+                event.key, run.spec.num_blocks, run.spec.max_residency)
+            self.policy.on_arrival(event.key)
+            self.machine.sync_residency_caps()
         elif isinstance(event, KernelEnded):
             self.predictor.on_kernel_end(event.key)
             self.policy.on_kernel_end(event.key)
@@ -212,24 +214,35 @@ class MachineBase:
         self.runs: Dict[str, KernelRun] = {}
         self.oracle_runtimes: Dict[str, float] = dict(oracle_runtimes or {})
         self.core = SchedulerCore(policy, predictor, n_sm)
-
-    # -- convenience views --------------------------------------------------
-    @property
-    def policy(self):
-        return self.core.policy
-
-    @property
-    def predictor(self) -> Predictor:
-        return self.core.predictor
+        self._key_order: Optional[List[str]] = None  # active_keys() cache
+        # Plain attributes, not properties: policies and predictors read
+        # machine.predictor in their innermost loops, and the core never
+        # swaps its policy/predictor after construction.
+        self.policy = self.core.policy
+        self.predictor: Predictor = self.core.predictor
 
     # -- Machine protocol ---------------------------------------------------
     def active_keys(self) -> List[str]:
         """Arrived (launch event processed), unfinished kernels in arrival
-        order."""
-        return [
-            k for k, r in sorted(self.runs.items(), key=lambda kv: kv[1].order)
-            if r.launched and not r.finished
-        ]
+        order.
+
+        Hot path (policies call this on every decision): the order-sorted
+        key list is cached and rebuilt only when the run set changes size
+        (dynamic arrivals on the executor); the launched/finished filter
+        stays per-call.
+        """
+        order = self._key_order
+        if order is None or len(order) != len(self.runs):
+            runs = self.runs
+            order = sorted(runs, key=lambda k: runs[k].order)
+            self._key_order = order
+        runs = self.runs
+        out = []
+        for k in order:
+            r = runs[k]
+            if r.launched and r.finish_time is None:
+                out.append(k)
+        return out
 
     def run_state(self, key: str) -> KernelRun:
         return self.runs[key]
@@ -241,7 +254,8 @@ class MachineBase:
         run = self.runs[key]
         if run.unissued <= 0:
             return False
-        cap = min(run.spec.max_residency, self.core.residency_cap(key, sm))
+        cap = min(run.spec.max_residency,
+                  self.core.policy.residency_cap(key, sm))
         if self._cap_residency(key, sm) >= cap:
             return False
         return self._fits_resources(key, sm)

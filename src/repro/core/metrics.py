@@ -6,13 +6,27 @@
   (lower is better).
 * StrictF — fairness (Vandierendonck & Seznec [36]): ratio of minimum to
   maximum slowdown; 1.0 means perfectly fair.
+
+Closed two-program workloads always finish, so :func:`evaluate` demands at
+least one finished kernel and raises :class:`MetricsError` on degenerate
+inputs (empty turnaround map, non-positive runtimes) instead of letting a
+``ZeroDivisionError`` surface from deep inside a sweep.  Open-loop and
+truncated runs (``run(until=...)``) go through :func:`evaluate_window`:
+STP/ANTT/fairness over the kernels that *finished* inside the observation
+window, plus makespan, utilization and finished/unfinished counts, so
+results with unfinished kernels are first-class instead of silently
+dropped.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
+
+
+class MetricsError(ValueError):
+    """Degenerate metric input (empty or non-positive runtimes)."""
 
 
 @dataclass(frozen=True)
@@ -25,13 +39,66 @@ class WorkloadMetrics:
         return {"stp": self.stp, "antt": self.antt, "fairness": self.fairness}
 
 
+@dataclass(frozen=True)
+class WindowMetrics:
+    """Completion-window evaluation of one (possibly truncated) run.
+
+    ``stp``/``antt``/``fairness`` are computed over the ``n_finished``
+    kernels that completed inside the window; they are ``nan`` when nothing
+    finished (a truncated run is data, not an error).  ``makespan`` and
+    ``end_time`` come from the machine (see
+    :attr:`repro.core.simulator.SimResult.makespan`), ``utilization`` is
+    the busy fraction of the machine over the window, and ``throughput``
+    is finished kernels per unit machine time.
+    """
+
+    stp: float
+    antt: float
+    fairness: float
+    n_finished: int
+    n_unfinished: int
+    makespan: float
+    end_time: float
+    utilization: float
+
+    @property
+    def complete(self) -> bool:
+        return self.n_unfinished == 0
+
+    @property
+    def throughput(self) -> float:
+        if self.end_time <= 0.0:
+            return 0.0
+        return self.n_finished / self.end_time
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "stp": self.stp, "antt": self.antt, "fairness": self.fairness,
+            "n_finished": self.n_finished, "n_unfinished": self.n_unfinished,
+            "makespan": self.makespan, "end_time": self.end_time,
+            "utilization": self.utilization,
+        }
+
+    @property
+    def workload_metrics(self) -> Optional[WorkloadMetrics]:
+        """The closed-workload view, or ``None`` if nothing finished."""
+        if self.n_finished == 0:
+            return None
+        return WorkloadMetrics(self.stp, self.antt, self.fairness)
+
+
 def slowdowns(turnaround: Dict[str, float],
               solo: Dict[str, float]) -> List[float]:
     out = []
     for key, multi in turnaround.items():
-        base = solo[key]
+        try:
+            base = solo[key]
+        except KeyError:
+            raise MetricsError(f"no solo runtime for kernel {key!r}") from None
         if base <= 0:
-            raise ValueError(f"non-positive solo runtime for {key}")
+            raise MetricsError(f"non-positive solo runtime for {key!r}")
+        if multi <= 0:
+            raise MetricsError(f"non-positive turnaround for {key!r}")
         out.append(multi / base)
     return out
 
@@ -41,8 +108,14 @@ def evaluate(turnaround: Dict[str, float],
     """Compute STP/ANTT/StrictF for one multiprogrammed run.
 
     ``turnaround`` maps kernel keys to multiprogram turnaround times;
-    ``solo`` maps the same keys to their isolated runtimes.
+    ``solo`` maps the same keys to their isolated runtimes.  Raises
+    :class:`MetricsError` on an empty or degenerate input; for truncated
+    open-loop runs use :func:`evaluate_window` instead.
     """
+    if not turnaround:
+        raise MetricsError(
+            "no finished kernels to evaluate "
+            "(open-loop/truncated runs: use evaluate_window)")
     sd = slowdowns(turnaround, solo)
     stp = sum(1.0 / s for s in sd)
     antt = sum(sd) / len(sd)
@@ -50,17 +123,48 @@ def evaluate(turnaround: Dict[str, float],
     return WorkloadMetrics(stp=stp, antt=antt, fairness=fairness)
 
 
+def evaluate_window(
+    turnaround: Dict[str, float],
+    solo: Dict[str, float],
+    unfinished: Sequence[str] = (),
+    end_time: float = 0.0,
+    makespan: Optional[float] = None,
+    utilization: float = float("nan"),
+) -> WindowMetrics:
+    """Evaluate a run over its observation window (open-loop first-class).
+
+    ``turnaround`` covers the kernels that finished inside the window;
+    ``unfinished`` lists the keys that did not.  When nothing finished the
+    quality metrics are ``nan`` rather than an error.
+    """
+    if turnaround:
+        m = evaluate(turnaround, solo)
+        stp, antt, fairness = m.stp, m.antt, m.fairness
+    else:
+        stp = antt = fairness = float("nan")
+    if makespan is None:
+        makespan = end_time
+    return WindowMetrics(
+        stp=stp, antt=antt, fairness=fairness,
+        n_finished=len(turnaround), n_unfinished=len(unfinished),
+        makespan=makespan, end_time=end_time, utilization=utilization)
+
+
 def geomean(values: Iterable[float]) -> float:
     vals = [v for v in values]
     if not vals:
-        return float("nan")
-    if any(v <= 0 for v in vals):
-        raise ValueError("geomean requires positive values")
+        raise MetricsError("geomean of an empty sequence")
+    if any(v <= 0 or math.isnan(v) for v in vals):
+        raise MetricsError(
+            "geomean requires positive finite values; got degenerate input "
+            f"{[v for v in vals if not v > 0 or math.isnan(v)][:4]!r}")
     return math.exp(sum(math.log(v) for v in vals) / len(vals))
 
 
 def summarize(per_workload: Sequence[WorkloadMetrics]) -> WorkloadMetrics:
     """Geometric means across workloads (as in the paper's Table 5)."""
+    if not per_workload:
+        raise MetricsError("summarize of an empty workload list")
     return WorkloadMetrics(
         stp=geomean(m.stp for m in per_workload),
         antt=geomean(m.antt for m in per_workload),

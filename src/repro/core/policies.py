@@ -251,6 +251,19 @@ class SRTF(Policy):
         return sorted(keys, key=lambda k: (self._remaining(k, sm),
                                            self._run(k).order))
 
+    def _best_candidate(self, sm: int) -> Optional[str]:
+        """First entry of :meth:`_candidates` without building the sorted
+        list — exclusive-mode ``decide`` only ever consults the winner."""
+        best_key = None
+        best_rank = None
+        for k in self._active():
+            if k not in self.eligible or self._run(k).unissued <= 0:
+                continue
+            rank = (self._remaining(k, sm), self._run(k).order)
+            if best_rank is None or rank < best_rank:
+                best_key, best_rank = k, rank
+        return best_key
+
     # --------------------------------------------------------------- decide
     def decide(self, sm: int) -> Decision:
         if self.sampling is not None and sm == self.sample_sm:
@@ -258,13 +271,14 @@ class SRTF(Policy):
             if self._run(key).unissued > 0 and self._fits(key, sm):
                 return SampleOnSM(key)
             return Hold("sample in flight on the sampling SM")
-        for key in self._candidates(sm):
-            if self._fits(key, sm):
-                return IssueGrant(key)
-            # Exclusive execution: do not backfill behind the SRTF winner
-            # while its blocks (or a draining co-runner's) occupy the SM.
-            return PreemptAtBoundary(key)
-        return Hold("no eligible kernel with a prediction")
+        key = self._best_candidate(sm)
+        if key is None:
+            return Hold("no eligible kernel with a prediction")
+        if self._fits(key, sm):
+            return IssueGrant(key)
+        # Exclusive execution: do not backfill behind the SRTF winner
+        # while its blocks (or a draining co-runner's) occupy the SM.
+        return PreemptAtBoundary(key)
 
 
 class SRTFAdaptive(SRTF):

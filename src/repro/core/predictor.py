@@ -170,7 +170,7 @@ def make_predictor(spec: Union[str, Predictor, None], n_sm: int,
 # ------------------------------------------------------------ simple slicing
 
 
-@dataclass
+@dataclass(slots=True)
 class PerSMState:
     """Table 1: per-kernel state maintained on each SM/lane."""
 
@@ -336,39 +336,60 @@ class SimpleSlicingPredictor(Predictor):
 
     def remaining(self, kernel: str, sm: int) -> Optional[float]:
         """Predicted remaining cycles for (kernel, sm) — the SRTF ranking key."""
-        if kernel not in self._state:
+        states = self._state.get(kernel)
+        if states is None:
             return None
-        st = self._state[kernel][sm]
+        st = states[sm]
         if st.t is None:
             return None
-        remaining_blocks = max(0, st.total_blocks - st.done_blocks)
-        return (remaining_blocks / max(1, st.resident_blocks)) * st.t
+        remaining_blocks = st.total_blocks - st.done_blocks
+        if remaining_blocks < 0:
+            remaining_blocks = 0
+        res = st.resident_blocks
+        return (remaining_blocks / (res if res > 1 else 1)) * st.t
 
     def gpu_remaining(self, kernel: str) -> Optional[float]:
         """Machine-level remaining-time estimate: mean over SMs with samples.
 
         Used by SRTF/Adaptive's slowdown projection and for logging; per-SM
-        scheduling decisions use :meth:`remaining` directly.
+        scheduling decisions use :meth:`remaining` directly.  (Inlined
+        per-SM arithmetic — this runs for every active kernel on every
+        block end under SRTF/Adaptive.)
         """
-        if kernel not in self._state:
+        states = self._state.get(kernel)
+        if states is None:
             return None
         vals = []
-        for sm in self._state[kernel]:
-            r = self.remaining(kernel, sm)
-            if r is not None:
-                vals.append(r)
+        for st in states.values():
+            if st.t is None:
+                continue
+            remaining_blocks = st.total_blocks - st.done_blocks
+            if remaining_blocks < 0:
+                remaining_blocks = 0
+            res = st.resident_blocks
+            vals.append((remaining_blocks / (res if res > 1 else 1)) * st.t)
         if not vals:
             return None
         return sum(vals) / len(vals)
 
     def gpu_predicted_total(self, kernel: str, now: float) -> Optional[float]:
-        if kernel not in self._state:
+        states = self._state.get(kernel)
+        if states is None:
             return None
         vals = []
-        for sm in self._state[kernel]:
-            p = self.predict(kernel, sm, now)
-            if p is not None:
-                vals.append(p)
+        for st in states.values():
+            if st.t is None:
+                continue
+            remaining_blocks = st.total_blocks - st.done_blocks
+            if remaining_blocks < 0:
+                remaining_blocks = 0
+            res = st.resident_blocks
+            remaining = (remaining_blocks / (res if res > 1 else 1)) * st.t
+            active = st.active_cycles
+            if st.running_count > 0:
+                active += now - st.running_since
+            st.pred_cycles = active + remaining
+            vals.append(st.pred_cycles)
         if not vals:
             return None
         return sum(vals) / len(vals)

@@ -1,0 +1,450 @@
+"""Scenario registry: named, seeded arrival-process generators.
+
+The paper's evaluation grid (Tables 5-6) is {two-program ERCBench
+workloads} x {policies} x {arrival offsets}; the ROADMAP's production story
+needs far more — open-loop Poisson kernel streams shared-cloud style
+(Kernelet), bursty ON/OFF DL traffic, N-program mixes, and replayed
+production traces.  This module makes every one of those a first-class,
+*named* workload generator with a single contract::
+
+    scenario = make_scenario("poisson-open", seed=0, n_arrivals=8)
+    workloads = scenario.workloads()   # -> List[(name, List[Arrival])]
+
+mirroring the policy/predictor registries (``POLICIES``/``PREDICTORS``):
+``SCENARIOS`` maps public names to classes, :func:`register_scenario` adds
+new ones, :func:`make_scenario` resolves names (or passes instances
+through).  Scenarios are **deterministic**: the same (scenario params,
+seed) produce bit-identical arrival lists in any process — RNG streams are
+seeded from ``zlib.crc32`` of the scenario name (stable across processes;
+Python's ``hash()`` is salted), exactly like the simulator's per-kernel
+noise streams.  That determinism is what makes sweep results
+content-addressable (:mod:`repro.core.sweep`).
+
+Built-in scenarios:
+
+* ``pair-stagger``  — the paper's 56 two-program ERCBench workloads
+  (Section 6.1.3); byte-identical to
+  :func:`repro.core.workload.two_program_workloads`.
+* ``table6-offset`` — the second kernel arrives after a fraction of the
+  first kernel's solo runtime (Table 6).
+* ``poisson-open``  — open-loop Poisson arrivals over an
+  ERCBench/Parboil2-like kernel mix (shared-cloud kernel streams).
+* ``bursty``        — heavy-tail ON/OFF bursts (Pareto burst sizes,
+  exponential gaps): the bursty many-kernel DL traffic shape.
+* ``nprogram-mix``  — random closed N-program workloads (N > 2).
+* ``trace-replay``  — arrivals replayed from a JSON trace (file or
+  in-memory), for production traces and hermetic tests.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import zlib
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
+
+import numpy as np
+
+from .workload import (
+    Arrival,
+    ERCBENCH,
+    KernelSpec,
+    PARBOIL2_LIKE,
+    TABLE3_RUNTIME,
+    two_program_workloads,
+)
+
+#: The single scenario contract: named workloads, each a list of arrivals.
+Workload = Tuple[str, List[Arrival]]
+
+#: Default open-loop mix: every ERCBench kernel except SHA1 (whose 22M-cycle
+#: solo runtime would dominate any stream) plus the short/medium
+#: Parboil2-like kernels.
+OPEN_LOOP_MIX: Tuple[str, ...] = (
+    "AES-d", "AES-e", "JPEG-d", "JPEG-e", "RayTracing", "SAD",
+    "ImageDenoising-nlm2", "SGEMM", "CUTCP", "HISTO",
+)
+
+
+def _spec_table(extra: Optional[Dict[str, KernelSpec]] = None
+                ) -> Dict[str, KernelSpec]:
+    table = dict(ERCBENCH)
+    table.update(PARBOIL2_LIKE)
+    if extra:
+        table.update(extra)
+    return table
+
+
+class Scenario:
+    """Base class: a seeded arrival-process generator.
+
+    Subclasses implement :meth:`workloads`; all randomness must come from
+    :meth:`rng` so that (params, seed) fully determine the output.
+    """
+
+    name = "base"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def rng(self, *extra: int) -> np.random.Generator:
+        """Process-stable RNG stream for this (scenario, seed[, extra])."""
+        name_hash = zlib.crc32(self.name.encode()) % (2 ** 31)
+        return np.random.default_rng(
+            np.random.SeedSequence(entropy=(self.seed, name_hash, *extra)))
+
+    def workloads(self) -> List[Workload]:
+        raise NotImplementedError
+
+    def reseeded(self, seed: int) -> "Scenario":
+        """A copy of this scenario drawing from ``seed`` instead.
+
+        Used by the sweep runner so one declarative spec can sweep arrival
+        draws and simulation noise coherently across seeds.
+        """
+        import copy
+        clone = copy.copy(self)
+        clone.seed = seed
+        return clone
+
+
+#: Registry of scenario implementations, keyed by their public name.
+SCENARIOS: Dict[str, Type[Scenario]] = {}
+
+
+def register_scenario(name: str):
+    """Class decorator registering a :class:`Scenario` under ``name``."""
+
+    def decorate(cls: Type[Scenario]) -> Type[Scenario]:
+        cls.name = name
+        SCENARIOS[name] = cls
+        return cls
+
+    return decorate
+
+
+def make_scenario(spec: Union[str, Scenario], **kwargs) -> Scenario:
+    """Resolve ``spec`` into a scenario instance.
+
+    ``spec`` may be an instance (returned as-is; kwargs then disallowed) or
+    a registered name constructed with ``**kwargs``.
+    """
+    if isinstance(spec, Scenario):
+        if kwargs:
+            raise ValueError("kwargs are only valid with a scenario name")
+        return spec
+    try:
+        cls = SCENARIOS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {spec!r}; choose from {sorted(SCENARIOS)}"
+        ) from None
+    return cls(**kwargs)
+
+
+@register_scenario("pair-stagger")
+class PairStagger(Scenario):
+    """The paper's two-program ERCBench workloads (Section 6.1.3).
+
+    Deterministic (no RNG): delegates to
+    :func:`~repro.core.workload.two_program_workloads`, so the 56-pair
+    sweep produced through the registry is byte-identical to the
+    hard-coded one the golden traces were pinned against.
+    """
+
+    def __init__(self, seed: int = 0,
+                 names: Optional[Sequence[str]] = None,
+                 stagger_cycles: float = 100.0,
+                 both_orders: bool = True):
+        super().__init__(seed)
+        self.names = list(names) if names is not None else None
+        self.stagger_cycles = stagger_cycles
+        self.both_orders = both_orders
+
+    def workloads(self) -> List[Workload]:
+        return two_program_workloads(
+            names=self.names, stagger_cycles=self.stagger_cycles,
+            both_orders=self.both_orders)
+
+
+@register_scenario("table6-offset")
+class Table6Offset(Scenario):
+    """Table 6: second kernel arrives after ``offset_fraction`` of the first
+    kernel's solo runtime.  ``solo`` maps kernel names to the solo runtimes
+    the offsets are computed from (defaults to the paper's Table 3 values;
+    the benchmarks pass the simulator-measured ones)."""
+
+    def __init__(self, seed: int = 0,
+                 offset_fraction: float = 0.25,
+                 names: Optional[Sequence[str]] = None,
+                 solo: Optional[Dict[str, float]] = None):
+        super().__init__(seed)
+        self.offset_fraction = offset_fraction
+        self.names = sorted(names) if names is not None else sorted(ERCBENCH)
+        self.solo = dict(solo) if solo is not None else dict(TABLE3_RUNTIME)
+
+    @property
+    def suffix(self) -> str:
+        """Workload-name suffix — the one place the fraction is formatted
+        (consumers filter cells with ``workload.endswith(scn.suffix)``)."""
+        return f"@{int(round(self.offset_fraction * 100))}"
+
+    def workloads(self) -> List[Workload]:
+        out: List[Workload] = []
+        for a, b in itertools.permutations(self.names, 2):
+            offset = self.offset_fraction * self.solo[a]
+            wl = [
+                Arrival(ERCBENCH[a], 0.0, uid=f"{a}#0"),
+                Arrival(ERCBENCH[b], offset, uid=f"{b}#1"),
+            ]
+            out.append((f"{a}+{b}{self.suffix}", wl))
+        return out
+
+
+class _MixScenario(Scenario):
+    """Shared machinery for scenarios drawing kernels from a named mix."""
+
+    def __init__(self, seed: int = 0,
+                 names: Sequence[str] = OPEN_LOOP_MIX,
+                 specs: Optional[Dict[str, KernelSpec]] = None):
+        super().__init__(seed)
+        self.names = list(names)
+        self.specs = _spec_table(specs)
+        missing = [n for n in self.names if n not in self.specs]
+        if missing:
+            raise ValueError(f"unknown kernels in mix: {missing}")
+
+    def _pick(self, rng: np.random.Generator) -> KernelSpec:
+        return self.specs[self.names[int(rng.integers(len(self.names)))]]
+
+    @staticmethod
+    def _build(arrivals: List[Tuple[KernelSpec, float]]) -> List[Arrival]:
+        return [Arrival(spec, t, uid=f"{spec.name}#{i}")
+                for i, (spec, t) in enumerate(arrivals)]
+
+
+@register_scenario("poisson-open")
+class PoissonOpen(Scenario):
+    """Open-loop Poisson kernel stream over an ERCBench/Parboil2-like mix.
+
+    Shared-cloud style (Kernelet): kernels arrive regardless of machine
+    state with exponential inter-arrival times of mean
+    ``mean_interarrival`` cycles.  With ``n_workloads`` > 1 each workload
+    is an independent draw of the same process.
+    """
+
+    def __init__(self, seed: int = 0,
+                 names: Sequence[str] = OPEN_LOOP_MIX,
+                 specs: Optional[Dict[str, KernelSpec]] = None,
+                 n_arrivals: int = 8,
+                 mean_interarrival: float = 100_000.0,
+                 n_workloads: int = 2):
+        self._mix = _MixScenario(seed, names, specs)
+        super().__init__(seed)
+        self.n_arrivals = n_arrivals
+        self.mean_interarrival = mean_interarrival
+        self.n_workloads = n_workloads
+
+    def workloads(self) -> List[Workload]:
+        out: List[Workload] = []
+        for w in range(self.n_workloads):
+            rng = self.rng(w)
+            t = 0.0
+            draws: List[Tuple[KernelSpec, float]] = []
+            for _ in range(self.n_arrivals):
+                draws.append((self._mix._pick(rng), t))
+                t += float(rng.exponential(self.mean_interarrival))
+            out.append((f"poisson{w}", self._mix._build(draws)))
+        return out
+
+
+@register_scenario("bursty")
+class Bursty(Scenario):
+    """Heavy-tail ON/OFF arrival bursts (bursty DL inference traffic).
+
+    Each burst holds ``1 + floor(Pareto(alpha))`` kernels (capped at
+    ``max_burst``) spaced ``Exp(within_gap)`` apart; bursts are separated
+    by ``Exp(idle_gap)`` quiet periods.
+    """
+
+    def __init__(self, seed: int = 0,
+                 names: Sequence[str] = OPEN_LOOP_MIX,
+                 specs: Optional[Dict[str, KernelSpec]] = None,
+                 n_bursts: int = 3,
+                 burst_alpha: float = 1.5,
+                 max_burst: int = 6,
+                 within_gap: float = 1_000.0,
+                 idle_gap: float = 500_000.0,
+                 n_workloads: int = 2):
+        self._mix = _MixScenario(seed, names, specs)
+        super().__init__(seed)
+        self.n_bursts = n_bursts
+        self.burst_alpha = burst_alpha
+        self.max_burst = max_burst
+        self.within_gap = within_gap
+        self.idle_gap = idle_gap
+        self.n_workloads = n_workloads
+
+    def workloads(self) -> List[Workload]:
+        out: List[Workload] = []
+        for w in range(self.n_workloads):
+            rng = self.rng(w)
+            t = 0.0
+            draws: List[Tuple[KernelSpec, float]] = []
+            for _ in range(self.n_bursts):
+                size = min(self.max_burst,
+                           1 + int(rng.pareto(self.burst_alpha)))
+                for _ in range(size):
+                    draws.append((self._mix._pick(rng), t))
+                    t += float(rng.exponential(self.within_gap))
+                t += float(rng.exponential(self.idle_gap))
+            out.append((f"bursty{w}", self._mix._build(draws)))
+        return out
+
+
+@register_scenario("nprogram-mix")
+class NProgramMix(Scenario):
+    """Random closed N-program workloads (N > 2): every kernel arrives
+    within the first ``max_stagger`` cycles, generalizing the paper's
+    two-program staggered launches to wider co-run sets."""
+
+    def __init__(self, seed: int = 0,
+                 names: Sequence[str] = OPEN_LOOP_MIX,
+                 specs: Optional[Dict[str, KernelSpec]] = None,
+                 n_programs: int = 4,
+                 max_stagger: float = 100.0,
+                 n_workloads: int = 4):
+        if n_programs < 2:
+            raise ValueError("nprogram-mix needs n_programs >= 2")
+        self._mix = _MixScenario(seed, names, specs)
+        super().__init__(seed)
+        self.n_programs = n_programs
+        self.max_stagger = max_stagger
+        self.n_workloads = n_workloads
+
+    def workloads(self) -> List[Workload]:
+        out: List[Workload] = []
+        for w in range(self.n_workloads):
+            rng = self.rng(w)
+            draws = [(self._mix._pick(rng),
+                      0.0 if i == 0 else
+                      float(rng.uniform(0.0, self.max_stagger)))
+                     for i in range(self.n_programs)]
+            draws.sort(key=lambda d: d[1])
+            out.append((f"mix{w}x{self.n_programs}", self._mix._build(draws)))
+        return out
+
+
+@register_scenario("trace-replay")
+class TraceReplay(Scenario):
+    """Replay arrivals from a JSON trace (production traces, hermetic tests).
+
+    Accepts either ``path`` to a JSON file or an in-memory ``trace``.
+    Two shapes are understood::
+
+        [{"kernel": "JPEG-d", "time": 0.0}, ...]                # one workload
+        {"workloads": [{"name": "w0", "arrivals": [...]}, ...]} # several
+
+    Kernel names resolve against ERCBench + Parboil2-like specs plus any
+    caller-supplied ``specs``.  Deterministic by construction (no RNG).
+    """
+
+    def __init__(self, seed: int = 0,
+                 path: Optional[Union[str, Path]] = None,
+                 trace: Optional[Union[list, dict]] = None,
+                 specs: Optional[Dict[str, KernelSpec]] = None,
+                 name: str = "trace"):
+        super().__init__(seed)
+        if (path is None) == (trace is None):
+            raise ValueError("trace-replay needs exactly one of path/trace")
+        self.path = str(path) if path is not None else None
+        self.trace = trace
+        self.specs = _spec_table(specs)
+        self.workload_name = name
+
+    def _events(self) -> Union[list, dict]:
+        if self.path is not None:
+            return json.loads(Path(self.path).read_text())
+        return self.trace
+
+    def _arrivals(self, events: Sequence[dict]) -> List[Arrival]:
+        out = []
+        for i, ev in enumerate(events):
+            kernel = ev["kernel"]
+            try:
+                spec = self.specs[kernel]
+            except KeyError:
+                raise ValueError(
+                    f"trace kernel {kernel!r} not in spec table") from None
+            out.append(Arrival(spec, float(ev.get("time", 0.0)),
+                               uid=ev.get("uid", f"{kernel}#{i}")))
+        return sorted(out, key=lambda a: a.time)
+
+    def workloads(self) -> List[Workload]:
+        data = self._events()
+        if isinstance(data, dict):
+            return [(wl.get("name", f"{self.workload_name}{i}"),
+                     self._arrivals(wl["arrivals"]))
+                    for i, wl in enumerate(data["workloads"])]
+        return [(self.workload_name, self._arrivals(data))]
+
+
+# --------------------------------------------------------------- utilities
+def workload_digest(arrivals: Sequence[Arrival]) -> str:
+    """Content digest of one arrival list (the sweep-cache workload key).
+
+    Covers every :class:`KernelSpec` field plus arrival times and uids, so
+    any change to the workload's content changes the digest.
+    """
+    import dataclasses
+    import hashlib
+
+    payload = [
+        {"spec": dataclasses.asdict(a.spec), "time": a.time, "uid": a.uid}
+        for a in arrivals
+    ]
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def submission_offsets(scenario: Union[str, Scenario], n: int,
+                       time_scale: float = 1.0, **kwargs) -> List[float]:
+    """First-workload arrival times as ``n`` submission offsets.
+
+    The serving/dryrun frontends use this to pace real job submissions from
+    a scenario's arrival process: offsets are the scenario's first
+    workload's arrival times scaled by ``time_scale`` (e.g. cycles ->
+    seconds).  If the workload holds fewer than ``n`` arrivals the stream
+    is extended at the mean observed gap.
+    """
+    scn = make_scenario(scenario, **kwargs)
+    workloads = scn.workloads()
+    if not workloads:
+        raise ValueError(f"scenario {scn.name!r} produced no workloads")
+    times = sorted(a.time for a in workloads[0][1])
+    if not times:
+        raise ValueError(f"scenario {scn.name!r} produced an empty workload")
+    gaps = [b - a for a, b in zip(times, times[1:])]
+    mean_gap = (sum(gaps) / len(gaps)) if gaps else 0.0
+    while len(times) < n:
+        times.append(times[-1] + mean_gap)
+    return [t * time_scale for t in times[:n]]
+
+
+__all__ = [
+    "Bursty",
+    "NProgramMix",
+    "OPEN_LOOP_MIX",
+    "PairStagger",
+    "PoissonOpen",
+    "SCENARIOS",
+    "Scenario",
+    "Table6Offset",
+    "TraceReplay",
+    "Workload",
+    "make_scenario",
+    "register_scenario",
+    "submission_offsets",
+    "workload_digest",
+]

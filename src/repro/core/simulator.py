@@ -140,6 +140,10 @@ class Simulator(MachineBase):
                          oracle_runtimes=oracle_runtimes)
         self.seed = seed
         self.sms = [SMState(i) for i in range(n_sm)]
+        #: Resource-weighted busy time: each executing block contributes
+        #: duration * spec.resource_fraction (one block = 1/R of an SM), so
+        #: utilization = busy_time / (n_sm * window) lands in [0, 1].
+        self.busy_time = 0.0
         self._events: List[Tuple[float, int, int, tuple]] = []
         self._seq = itertools.count()
         self.trace: List[BlockRecord] = [] if record_trace else None
@@ -182,6 +186,13 @@ class Simulator(MachineBase):
         while self._events:
             time, kind, _, data = heapq.heappop(self._events)
             if until is not None and time > until:
+                # Truncated: blocks still in flight have run from their
+                # start to the window edge — credit that busy time so
+                # utilization stays meaningful for open-loop runs.
+                for _, k, _, d in self._events + [(time, kind, 0, data)]:
+                    if k == _BLOCK_END:
+                        frac = self.runs[d[0]].spec.resource_fraction
+                        self.busy_time += max(0.0, self.now - d[3]) * frac
                 break
             self.now = time
             if kind == _ARRIVAL:
@@ -198,9 +209,11 @@ class Simulator(MachineBase):
         for sm in self.sms:
             self._try_issue(sm)
 
-    def _handle_block_end(self, key: str, sm_index: int, slot: int) -> None:
+    def _handle_block_end(self, key: str, sm_index: int, slot: int,
+                          start: float) -> None:
         run = self.runs[key]
         sm = self.sms[sm_index]
+        self.busy_time += (self.now - start) * run.spec.resource_fraction
         sm.free(slot, run.spec)
         run.resident_per_sm[sm_index] -= 1
         run.done += 1
@@ -278,29 +291,26 @@ class Simulator(MachineBase):
                 other.spec.corunner_pressure
                 * other.resident(sm.index) * other.spec.warps_per_block)
 
-        base = spec.duration(
-            _NO_NOISE_RNG, residency, corunner_warps, first_wave)
+        base = spec.duration(None, residency, corunner_warps, first_wave)
         duration = base * float(run.noise[noise_idx])
 
         self.core.post(BlockStarted(run.key, sm.index, slot, self.now))
-        self._push(self.now + duration, _BLOCK_END, (run.key, sm.index, slot))
+        self._push(self.now + duration, _BLOCK_END,
+                   (run.key, sm.index, slot, self.now))
         if self.trace is not None:
             self.trace.append(BlockRecord(
                 run.key, sm.index, slot, self.now, self.now + duration))
 
 
-class _NoNoiseRNG:
-    """Duration model RNG stub: noise is applied separately (see module doc)."""
-
-    def lognormal(self, mean: float = 0.0, sigma: float = 1.0) -> float:  # pragma: no cover
-        return 1.0
-
-
-_NO_NOISE_RNG = _NoNoiseRNG()
-
-
 class SimResult:
-    """Outcome of one simulation: per-kernel turnarounds and traces."""
+    """Outcome of one simulation: per-kernel turnarounds and traces.
+
+    Truncated (``run(until=...)``) and open-loop runs are first-class:
+    kernels that did not finish inside the observation window are listed in
+    :attr:`unfinished` (instead of silently dropped), :attr:`end_time` is
+    the machine clock when the run stopped, and :attr:`makespan` stays
+    well-defined (the window end while work is still in flight).
+    """
 
     def __init__(self, sim: Simulator):
         self.sim = sim
@@ -308,17 +318,44 @@ class SimResult:
         self.finish: Dict[str, float] = {}
         self.arrival: Dict[str, float] = {}
         self.name: Dict[str, str] = {}
-        for key, run in sim.runs.items():
+        #: Keys of arrived-or-pending kernels without a finish time, in
+        #: arrival order (cancelled kernels included — see ``cancelled``).
+        self.unfinished: List[str] = []
+        #: Machine clock when the run stopped (last processed event time).
+        self.end_time: float = sim.now
+        for key, run in sorted(sim.runs.items(), key=lambda kv: kv[1].order):
+            self.name[key] = run.spec.name
             if run.finish_time is None:
+                self.unfinished.append(key)
                 continue
             self.turnaround[key] = run.finish_time - run.arrival_time
             self.finish[key] = run.finish_time
             self.arrival[key] = run.arrival_time
-            self.name[key] = run.spec.name
+
+    @property
+    def complete(self) -> bool:
+        return not self.unfinished
+
+    @property
+    def cancelled(self) -> List[str]:
+        return [k for k in self.unfinished if self.sim.runs[k].cancelled]
 
     @property
     def makespan(self) -> float:
+        """Last finish time for complete runs; for truncated runs (work
+        still in flight) the end of the observation window."""
+        if self.unfinished:
+            return self.end_time
         return max(self.finish.values(), default=0.0)
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of total SM-time spent executing blocks over the
+        observation window (in-flight blocks are clipped at the window
+        edge for truncated runs)."""
+        if self.end_time <= 0.0:
+            return 0.0
+        return self.sim.busy_time / (self.sim.n_sm * self.end_time)
 
 
 def simulate(
@@ -330,12 +367,13 @@ def simulate(
     record_predictions: bool = False,
     oracle_runtimes: Optional[Dict[str, float]] = None,
     predictor: Union[str, Predictor, None] = None,
+    until: Optional[float] = None,
 ) -> SimResult:
     sim = Simulator(
         arrivals, policy_factory(), n_sm=n_sm, seed=seed,
         record_trace=record_trace, record_predictions=record_predictions,
         oracle_runtimes=oracle_runtimes, predictor=predictor)
-    return sim.run()
+    return sim.run(until=until)
 
 
 def solo_runtime(

@@ -1,0 +1,362 @@
+"""Declarative experiment sweeps with a content-addressed cache and
+multiprocess fan-out.
+
+One :class:`SweepSpec` names the whole grid — scenarios x policies x
+predictors x seeds — and :func:`run_sweep` executes it:
+
+* **cells** are (workload, policy, predictor, seed) simulations; SJF/LJF
+  are realized the way the paper realizes them (FIFO with oracle-chosen
+  arrival order, Section 2), and every cell gets the measured solo
+  runtimes as its oracle, exactly like the hand-rolled benchmark loops
+  this module replaces;
+* **fan-out**: with ``jobs > 1`` cells run in a process pool (the DES is
+  pure Python, so processes — not threads — buy real parallelism);
+* **cache**: with ``cache_dir`` every cell and solo-runtime measurement is
+  stored content-addressed, keyed by a SHA-256 over the *workload content*
+  (every :class:`~repro.core.workload.KernelSpec` field, arrival times,
+  uids — see :func:`repro.core.scenarios.workload_digest`), the policy,
+  the resolved predictor name, the simulation seed, machine size, horizon
+  and the solo-runtime oracle.  A warm rerun touches no simulator code and
+  returns bit-identical :class:`~repro.core.metrics.WorkloadMetrics`
+  (floats survive the JSON round-trip exactly).  The key does NOT cover
+  the simulator/policy *code*: bump :data:`CACHE_VERSION` (or clear the
+  cache directory) when a schedule-changing code change is intended.
+
+Open-loop runs are first-class: cells carry
+:class:`~repro.core.metrics.WindowMetrics` (completion-window STP/ANTT/
+fairness + makespan/utilization/finished counts), and ``until`` truncates
+every simulation at a horizon.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from .metrics import (
+    MetricsError,
+    WindowMetrics,
+    WorkloadMetrics,
+    evaluate_window,
+    geomean,
+)
+from .policies import make_policy
+from .predictor import DEFAULT_PREDICTOR
+from .scenarios import Scenario, make_scenario, workload_digest
+from .simulator import simulate, solo_runtime
+from .workload import Arrival, KernelSpec, N_SM, reorder_for_oracle
+
+#: Bump when simulator/policy/predictor changes intentionally alter
+#: schedules: cached cells are only valid for the code that produced them.
+CACHE_VERSION = 1
+
+#: Policies realized as FIFO over an oracle-reordered arrival list.
+ORACLE_ORDER_POLICIES = ("sjf", "ljf")
+
+#: Placeholder marking a cache key as scheduled-for-computation.
+_PENDING: dict = {}
+
+
+# ------------------------------------------------------------------ spec
+@dataclass(frozen=True)
+class SweepSpec:
+    """The declarative experiment grid.
+
+    ``scenarios`` holds registered names and/or :class:`Scenario`
+    instances (names are constructed with default parameters).  ``seeds``
+    are *sweep* seeds: each reseeds the scenario's arrival draws and the
+    simulator's noise streams coherently.  ``until`` (cycles) truncates
+    every cell at an observation horizon — the open-loop mode.
+    """
+
+    scenarios: Tuple[Union[str, Scenario], ...]
+    policies: Tuple[str, ...]
+    predictors: Tuple[Optional[str], ...] = (None,)
+    seeds: Tuple[int, ...] = (0,)
+    n_sm: int = N_SM
+    until: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "policies", tuple(self.policies))
+        object.__setattr__(self, "predictors", tuple(self.predictors))
+        object.__setattr__(self, "seeds", tuple(self.seeds))
+
+
+@dataclass(frozen=True)
+class CellResult:
+    """One executed (workload, policy, predictor, seed) cell."""
+
+    scenario: str
+    workload: str
+    policy: str
+    predictor: str
+    seed: int
+    window: WindowMetrics
+    turnaround: Dict[str, float]
+    finish: Dict[str, float]
+    unfinished: Tuple[str, ...]
+    names: Dict[str, str]          # kernel key -> spec name
+
+    @property
+    def metrics(self) -> Optional[WorkloadMetrics]:
+        """Closed-workload STP/ANTT/fairness (``None`` if nothing
+        finished inside the window)."""
+        return self.window.workload_metrics
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["unfinished"] = list(self.unfinished)
+        return d
+
+    @classmethod
+    def from_record(cls, record: dict, **labels) -> "CellResult":
+        """Attach sweep labels to one cached simulation record.
+
+        Records are label-free on purpose: an SJF cell and the FIFO cell
+        of the mirrored workload are the *same simulation* and share one
+        cache entry; only the labels differ.
+        """
+        return cls(
+            window=WindowMetrics(**record["window"]),
+            turnaround=dict(record["turnaround"]),
+            finish=dict(record["finish"]),
+            unfinished=tuple(record["unfinished"]),
+            names=dict(record["names"]), **labels)
+
+
+class SweepResult:
+    """All cells of one sweep plus cache/runtime statistics."""
+
+    def __init__(self, cells: List[CellResult], stats: Dict[str, float]):
+        self.cells = cells
+        self.stats = stats
+
+    def select(self, scenario: Optional[str] = None,
+               policy: Optional[str] = None,
+               predictor: Optional[str] = None,
+               seed: Optional[int] = None) -> List[CellResult]:
+        return [
+            c for c in self.cells
+            if (scenario is None or c.scenario == scenario)
+            and (policy is None or c.policy == policy)
+            and (predictor is None or c.predictor == predictor)
+            and (seed is None or c.seed == seed)
+        ]
+
+    def summary(self, **filters) -> WorkloadMetrics:
+        """Geometric-mean STP/ANTT/fairness over the selected cells'
+        finished-kernel metrics (paper Table-5 style)."""
+        ms = [c.metrics for c in self.select(**filters)]
+        ms = [m for m in ms if m is not None]
+        if not ms:
+            raise MetricsError(f"no finished cells match {filters!r}")
+        return WorkloadMetrics(
+            stp=geomean(m.stp for m in ms),
+            antt=geomean(m.antt for m in ms),
+            fairness=geomean(m.fairness for m in ms))
+
+    def unfinished_total(self, **filters) -> int:
+        return sum(c.window.n_unfinished for c in self.select(**filters))
+
+
+# ----------------------------------------------------------------- cache
+def _canonical_digest(payload: dict) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _cache_read(cache_dir: Optional[Path], key: str) -> Optional[dict]:
+    if cache_dir is None:
+        return None
+    path = cache_dir / f"{key}.json"
+    try:
+        return json.loads(path.read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        return None
+
+
+def _cache_write(cache_dir: Optional[Path], key: str, record: dict) -> None:
+    if cache_dir is None:
+        return
+    cache_dir.mkdir(parents=True, exist_ok=True)
+    path = cache_dir / f"{key}.json"
+    tmp = cache_dir / f".{key}.{os.getpid()}.tmp"
+    tmp.write_text(json.dumps(record, sort_keys=True))
+    os.replace(tmp, path)  # atomic under concurrent writers
+
+
+def solo_runtime_cached(spec: KernelSpec, seed: int = 0, n_sm: int = N_SM,
+                        cache_dir: Optional[Union[str, Path]] = None
+                        ) -> float:
+    """Measured FIFO solo runtime of ``spec``, through the sweep cache."""
+    cache_dir = Path(cache_dir) if cache_dir is not None else None
+    key = _canonical_digest({
+        "version": CACHE_VERSION, "kind": "solo",
+        "spec": dataclasses.asdict(spec), "seed": seed, "n_sm": n_sm,
+    })
+    hit = _cache_read(cache_dir, key)
+    if hit is not None:
+        return float(hit["runtime"])
+    rt = solo_runtime(spec, lambda: make_policy("fifo"), n_sm=n_sm,
+                      seed=seed)
+    _cache_write(cache_dir, key, {"runtime": rt})
+    return rt
+
+
+def _cell_key(arrivals: Sequence[Arrival], policy: str, predictor: str,
+              seed: int, n_sm: int, until: Optional[float],
+              solo: Dict[str, float]) -> str:
+    # The workload content enters through scenarios.workload_digest — the
+    # one canonical payload (spec fields + times + uids) shared with tests
+    # and documentation.
+    return _canonical_digest({
+        "version": CACHE_VERSION, "kind": "cell",
+        "workload": workload_digest(arrivals),
+        "policy": policy, "predictor": predictor, "seed": seed,
+        "n_sm": n_sm, "until": until, "solo": solo,
+    })
+
+
+# ---------------------------------------------------------------- worker
+def _effective(arrivals: Sequence[Arrival], policy: str,
+               solo: Dict[str, float]) -> Tuple[List[Arrival], str]:
+    """The (arrival list, policy) a cell actually simulates.
+
+    SJF/LJF are realized the way the paper realizes them (Section 2): FIFO
+    over the oracle-reordered arrival list.  Keying the cache on this
+    *effective* content dedups them against the FIFO cells of the mirrored
+    workloads — a pre-refactor ``run_workload`` invariant, now exploited.
+    """
+    if policy in ORACLE_ORDER_POLICIES:
+        return (reorder_for_oracle(arrivals, solo,
+                                   longest_first=(policy == "ljf")), "fifo")
+    return list(arrivals), policy
+
+
+def _run_cell(payload: dict) -> dict:
+    """Execute one simulation (module-level: pickles into worker processes).
+
+    The payload carries *effective* arrivals/policy (see :func:`_effective`)
+    and the solo-runtime oracle; the returned record is label-free.
+    """
+    solo: Dict[str, float] = payload["solo"]
+    res = simulate(
+        payload["arrivals"],
+        lambda: make_policy(payload["policy"]),
+        n_sm=payload["n_sm"],
+        seed=payload["seed"],
+        oracle_runtimes=solo,
+        predictor=payload["predictor"],
+        until=payload["until"],
+    )
+    solo_by_key = {k: solo[res.name[k]] for k in res.turnaround}
+    window = evaluate_window(
+        res.turnaround, solo_by_key, unfinished=res.unfinished,
+        end_time=res.end_time, makespan=res.makespan,
+        utilization=res.utilization)
+    record = {
+        "window": dataclasses.asdict(window),
+        "turnaround": dict(res.turnaround),
+        "finish": dict(res.finish),
+        "unfinished": list(res.unfinished),
+        "names": dict(res.name),
+    }
+    _cache_write(payload["cache_dir"], payload["key"], record)
+    return record
+
+
+# ---------------------------------------------------------------- runner
+def run_sweep(spec: SweepSpec, jobs: int = 1,
+              cache_dir: Optional[Union[str, Path]] = None) -> SweepResult:
+    """Execute every cell of ``spec``; see the module docstring."""
+    t0 = time.perf_counter()
+    cache_dir = Path(cache_dir) if cache_dir is not None else None
+
+    # Materialize workloads once per (scenario, seed) and measure the solo
+    # oracle for every kernel they mention (cached; cheap next to cells).
+    pending: List[dict] = []
+    ordered: List[Tuple[str, dict]] = []   # (key, labels) in cell order
+    records: Dict[str, dict] = {}          # key -> raw record (disk hits)
+    solo_memo: Dict[tuple, float] = {}     # in-memory; scenarios share kernels
+    hits = 0
+    for scn_ref in spec.scenarios:
+        base = make_scenario(scn_ref)
+        for seed in spec.seeds:
+            scn = base.reseeded(seed)
+            workloads = scn.workloads()
+            names = sorted({a.spec.name for _, wl in workloads for a in wl})
+            specs = {a.spec.name: a.spec for _, wl in workloads for a in wl}
+            solo = {}
+            for n in names:
+                memo_key = (specs[n], seed, spec.n_sm)
+                if memo_key not in solo_memo:
+                    solo_memo[memo_key] = solo_runtime_cached(
+                        specs[n], seed=seed, n_sm=spec.n_sm,
+                        cache_dir=cache_dir)
+                solo[n] = solo_memo[memo_key]
+            for wl_name, arrivals in workloads:
+                wl_solo = {a.spec.name: solo[a.spec.name] for a in arrivals}
+                for policy in spec.policies:
+                    eff_arrivals, eff_policy = _effective(
+                        arrivals, policy, wl_solo)
+                    for pred in spec.predictors:
+                        pred_name = DEFAULT_PREDICTOR if pred is None else pred
+                        key = _cell_key(eff_arrivals, eff_policy, pred_name,
+                                        seed, spec.n_sm, spec.until, wl_solo)
+                        ordered.append((key, {
+                            "scenario": scn.name, "workload": wl_name,
+                            "policy": policy, "predictor": pred_name,
+                            "seed": seed,
+                        }))
+                        if key in records:
+                            continue   # in-flight dedup (e.g. SJF == FIFO)
+                        hit = _cache_read(cache_dir, key)
+                        if hit is not None:
+                            hits += 1
+                            records[key] = hit
+                            continue
+                        records[key] = _PENDING
+                        pending.append({
+                            "key": key, "arrivals": eff_arrivals,
+                            "policy": eff_policy, "predictor": pred_name,
+                            "seed": seed, "n_sm": spec.n_sm,
+                            "until": spec.until, "solo": wl_solo,
+                            "cache_dir": cache_dir,
+                        })
+
+    if pending:
+        if jobs > 1:
+            with ProcessPoolExecutor(max_workers=jobs) as pool:
+                results = list(pool.map(_run_cell, pending, chunksize=1))
+        else:
+            results = [_run_cell(p) for p in pending]
+        for payload, record in zip(pending, results):
+            records[payload["key"]] = record
+
+    cells = [CellResult.from_record(records[key], **labels)
+             for key, labels in ordered]
+    stats = {
+        "cells": len(ordered), "cache_hits": hits,
+        "computed": len(pending),
+        "deduplicated": len(ordered) - len(records),
+        "jobs": jobs, "elapsed_s": time.perf_counter() - t0,
+    }
+    return SweepResult(cells, stats)
+
+
+__all__ = [
+    "CACHE_VERSION",
+    "CellResult",
+    "SweepResult",
+    "SweepSpec",
+    "run_sweep",
+    "solo_runtime_cached",
+]

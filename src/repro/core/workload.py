@@ -21,6 +21,7 @@ Eq. 1 with N_SM = 15 (Table 4).
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -53,11 +54,14 @@ class KernelSpec:
     stagger_frac: float = 0.0      # first-wave issue stagger, as fraction of t (Fig. 5)
     stagger_sm_prob: float = 0.0   # probability a given SM staggers (hardware-like)
 
-    @property
+    # cached_property (not property): both are read on every block issue /
+    # free in the DES hot loop, and a frozen dataclass can still cache into
+    # its __dict__.  Not dataclass fields, so asdict()/eq are unaffected.
+    @functools.cached_property
     def warps_per_block(self) -> int:
         return math.ceil(self.threads_per_block / THREADS_PER_WARP)
 
-    @property
+    @functools.cached_property
     def resource_fraction(self) -> float:
         """Fraction of one SM consumed by one resident block.
 
@@ -85,18 +89,22 @@ class KernelSpec:
 
     def duration(
         self,
-        rng: np.random.Generator,
+        rng: Optional[np.random.Generator],
         residency: int,
         corunner_warps: float = 0.0,
         first_wave: bool = False,
     ) -> float:
-        """Sample one block duration under the current SM conditions."""
+        """Sample one block duration under the current SM conditions.
+
+        ``rng=None`` skips the per-block noise factor (the simulator
+        applies its own precomputed per-block noise stream instead).
+        """
         t = self.base_t(residency)
         if corunner_warps > 0.0:
             t *= 1.0 + self.corunner_sens * (corunner_warps / MAX_WARPS_PER_SM)
         if first_wave and self.startup_factor > 0.0:
             t *= 1.0 + self.startup_factor
-        if self.rsd > 0.0:
+        if rng is not None and self.rsd > 0.0:
             sigma = math.sqrt(math.log(1.0 + self.rsd * self.rsd))
             t *= rng.lognormal(mean=-0.5 * sigma * sigma, sigma=sigma)
         return max(t, 1.0)
@@ -129,6 +137,23 @@ ERCBENCH: Dict[str, KernelSpec] = {
         KernelSpec("SHA1", 1539, 8, 64, 1708531.0, 0.0798,
                    startup_factor=0.15, stagger_frac=0.30, stagger_sm_prob=0.4,
                    corunner_pressure=1.6),
+    ]
+}
+
+#: Synthetic "Parboil2-like" kernels used where the paper also evaluates
+#: Parboil2 (Figs. 3/4) and by the open-loop scenario mixes.  Grid shapes
+#: chosen to mimic the named kernels' published structure; durations are
+#: arbitrary but the *structure* (many uniform blocks / staggered /
+#: value-dependent) is what is tested.
+PARBOIL2_LIKE: Dict[str, KernelSpec] = {
+    spec.name: spec
+    for spec in [
+        KernelSpec("SGEMM", 528, 6, 128, 80_000.0, 0.03),
+        KernelSpec("LBM", 18_000, 6, 120, 12_000.0, 0.05,
+                   stagger_frac=0.4, stagger_sm_prob=1.0),
+        KernelSpec("CUTCP", 121, 8, 128, 150_000.0, 0.30),
+        KernelSpec("HISTO", 2_042, 8, 192, 25_000.0, 0.08,
+                   startup_factor=0.2),
     ]
 }
 

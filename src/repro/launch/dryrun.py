@@ -31,6 +31,7 @@ from pathlib import Path
 import jax
 
 from repro.core.predictor import staircase_runtime
+from repro.core.scenarios import SCENARIOS, make_scenario
 from repro.configs import ARCHS, SHAPES, get_arch
 from repro.configs.shapes import SHAPE_ORDER, shape_applicable
 from repro.launch.mesh import make_production_mesh
@@ -193,6 +194,21 @@ def _write(out_dir: Path, mesh_name: str, arch: str, shape: str,
         json.dump(record, f, indent=1, sort_keys=True)
 
 
+def _scenario_order(cells: list, scenario: str, seed: int) -> list:
+    """Order compile cells as a submission stream from the scenario registry.
+
+    The dry-run sweep is this driver's workload: each (arch, shape) cell
+    is one submitted job, and the named scenario's seeded RNG stream
+    (:meth:`repro.core.scenarios.Scenario.rng` — process-stable) draws the
+    submission order.  Unlike the default nested arch x shape loop this
+    interleaves architectures, so early cells give diverse signal and the
+    same ``--scenario --seed`` pair replays the same stream anywhere.
+    """
+    scn = make_scenario(scenario, seed=seed)
+    order = scn.rng(len(cells)).permutation(len(cells))
+    return [cells[i] for i in order]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=sorted(ARCHS), help="single arch")
@@ -203,6 +219,14 @@ def main() -> None:
                     help="use the 2x16x16 multi-pod mesh (default 16x16)")
     ap.add_argument("--out", default="artifacts/dryrun", type=Path)
     ap.add_argument("--skip-existing", action="store_true")
+    # trace-replay is excluded: it needs a path/trace the CLI doesn't take.
+    ap.add_argument("--scenario", default=None,
+                    choices=sorted(set(SCENARIOS) - {"trace-replay"}),
+                    help="order the compile cells as a submission stream "
+                         "drawn from this registered arrival process "
+                         "(deterministic per --seed)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="scenario seed (with --scenario)")
     args = ap.parse_args()
 
     cells = []
@@ -216,6 +240,9 @@ def main() -> None:
         cells = [(args.arch, s) for s in SHAPE_ORDER]
     else:
         ap.error("pass --all or --arch [--shape]")
+
+    if args.scenario:
+        cells = _scenario_order(cells, args.scenario, args.seed)
 
     mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
     failures = 0

@@ -16,10 +16,20 @@ the number after is the machine-wide submission order.  Solo baselines are
 measured once per distinct (arch, blocks) item and mapped to job keys at
 submission time.
 
+Submission pacing comes from the scenario registry
+(:mod:`repro.core.scenarios`) when ``--scenario`` is given: the named
+arrival process (``poisson-open`` open-loop streams, ``bursty`` ON/OFF
+traffic, ...) is sampled at ``--seed`` and its arrival times, scaled by
+``--time-scale`` seconds/cycle, pace the async submissions.  Without it,
+jobs arrive every ``--stagger`` seconds (the paper's staggered launches).
+
 Example::
 
     PYTHONPATH=src python -m repro.launch.serve \
         --jobs yi-6b:24,minicpm3-4b:6 --policy srtf --compare-fifo
+    PYTHONPATH=src python -m repro.launch.serve \
+        --jobs yi-6b:8,minicpm3-4b:4,yi-6b:8 --scenario poisson-open \
+        --time-scale 2e-7 --policy srtf
 """
 
 from __future__ import annotations
@@ -33,6 +43,7 @@ from repro.core.executor import LaneExecutor
 from repro.core.jobs import make_serve_job
 from repro.core.metrics import evaluate
 from repro.core.policies import make_policy
+from repro.core.scenarios import SCENARIOS, submission_offsets
 from repro.core.scheduler_service import SchedulerService
 
 
@@ -74,16 +85,34 @@ def measure_solo(args) -> Dict[Tuple[str, int], float]:
     return solo
 
 
+def submission_schedule(args) -> List[float]:
+    """Per-job submission offsets (seconds since the first submission).
+
+    Default: a fixed ``--stagger`` gap, the paper's staggered launches.
+    With ``--scenario`` the offsets come from the named arrival process in
+    the scenario registry (e.g. ``poisson-open`` for shared-cloud open-loop
+    streams), scaled by ``--time-scale`` seconds per cycle.
+    """
+    n = len(parse_jobs(args))
+    if not args.scenario:
+        return [i * args.stagger for i in range(n)]
+    return submission_offsets(args.scenario, n, time_scale=args.time_scale,
+                              seed=args.seed)
+
+
 async def run_service(args, policy: str, solo: Dict[Tuple[str, int], float]):
     """One policy run: staggered async submissions against a live service."""
     service = SchedulerService(n_lanes=args.lanes, policy=policy,
                                predictor=args.predictor)
+    offsets = submission_schedule(args)
     try:
         handles = []
         solo_by_key: Dict[str, float] = {}
+        t0 = asyncio.get_event_loop().time()
         for i, (arch_id, blocks) in enumerate(parse_jobs(args)):
-            if i:
-                await asyncio.sleep(args.stagger)  # late arrival, busy machine
+            delay = t0 + offsets[i] - asyncio.get_event_loop().time()
+            if delay > 0:
+                await asyncio.sleep(delay)  # late arrival, busy machine
             job = build_job(args, arch_id, blocks, args.seed + i)
             handle = service.submit(job, tenant=arch_id,
                                     solo_runtime=solo[(arch_id, blocks)])
@@ -125,6 +154,15 @@ def main() -> None:
     ap.add_argument("--tokens-per-block", type=int, default=8)
     ap.add_argument("--stagger", type=float, default=0.02,
                     help="seconds between async job submissions")
+    # trace-replay is excluded: it needs a path/trace the CLI doesn't take.
+    ap.add_argument("--scenario", default=None,
+                    choices=sorted(set(SCENARIOS) - {"trace-replay"}),
+                    help="draw submission offsets from this registered "
+                         "arrival process instead of a fixed stagger "
+                         "(e.g. poisson-open, bursty)")
+    ap.add_argument("--time-scale", type=float, default=1e-6,
+                    help="seconds of wall time per scenario cycle "
+                         "(with --scenario)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     solo = measure_solo(args)

@@ -1,11 +1,18 @@
-"""Tests for STP / ANTT / StrictF metrics."""
+"""Tests for STP / ANTT / StrictF metrics and completion-window evaluation."""
 
 import math
 
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core.metrics import evaluate, geomean, summarize, WorkloadMetrics
+from repro.core.metrics import (
+    MetricsError,
+    WorkloadMetrics,
+    evaluate,
+    evaluate_window,
+    geomean,
+    summarize,
+)
 
 
 def test_perfect_sharing():
@@ -28,7 +35,57 @@ def test_geomean():
     assert geomean([1.0, 4.0]) == pytest.approx(2.0)
     with pytest.raises(ValueError):
         geomean([1.0, -1.0])
-    assert math.isnan(geomean([]))
+
+
+# ------------------------------------------------- degenerate-input hardening
+def test_geomean_degenerate_inputs_raise_explicitly():
+    with pytest.raises(MetricsError, match="empty"):
+        geomean([])
+    with pytest.raises(MetricsError, match="positive"):
+        geomean([0.0, 1.0])
+    with pytest.raises(MetricsError):
+        geomean([float("nan")])
+
+
+def test_evaluate_degenerate_inputs_raise_explicitly():
+    with pytest.raises(MetricsError, match="no finished kernels"):
+        evaluate({}, {})
+    with pytest.raises(MetricsError, match="solo"):
+        evaluate({"a": 1.0}, {"a": 0.0})
+    with pytest.raises(MetricsError, match="turnaround"):
+        evaluate({"a": 0.0}, {"a": 1.0})
+    with pytest.raises(MetricsError, match="no solo runtime"):
+        evaluate({"a": 1.0}, {})
+    with pytest.raises(MetricsError, match="empty"):
+        summarize([])
+
+
+# --------------------------------------------------- completion-window metrics
+def test_evaluate_window_complete_run_matches_evaluate():
+    turn, solo = {"a": 10.0, "b": 20.0}, {"a": 10.0, "b": 10.0}
+    w = evaluate_window(turn, solo, end_time=25.0, makespan=25.0,
+                        utilization=0.5)
+    m = evaluate(turn, solo)
+    assert (w.stp, w.antt, w.fairness) == (m.stp, m.antt, m.fairness)
+    assert w.complete and w.n_finished == 2 and w.n_unfinished == 0
+    assert w.workload_metrics == m
+    assert w.throughput == pytest.approx(2 / 25.0)
+
+
+def test_evaluate_window_truncated_run_is_first_class():
+    w = evaluate_window({"a": 10.0}, {"a": 10.0}, unfinished=["b", "c"],
+                        end_time=50.0)
+    assert not w.complete
+    assert w.n_finished == 1 and w.n_unfinished == 2
+    assert w.makespan == 50.0           # defaults to the window end
+    assert w.stp == pytest.approx(1.0)
+
+
+def test_evaluate_window_nothing_finished_is_nan_not_error():
+    w = evaluate_window({}, {}, unfinished=["a"], end_time=5.0)
+    assert math.isnan(w.stp) and math.isnan(w.antt) and math.isnan(w.fairness)
+    assert w.workload_metrics is None
+    assert w.throughput == 0.0
 
 
 def test_summarize_is_geomean_per_metric():

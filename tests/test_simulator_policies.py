@@ -180,9 +180,13 @@ def test_solo_runtimes_match_table3():
     assert 0.9 < geo < 1.1
 
 
+@pytest.mark.slow
 def test_table5_policy_ordering():
     """The paper's headline ordering: SJF > SRTF > {FIFO, MPMax}; and
-    Adaptive is the fairest realizable policy (Table 5)."""
+    Adaptive is the fairest realizable policy (Table 5).
+
+    Full Table-5 cells over the heavy SHA1/RayTracing pairs — slow tier.
+    """
     from repro.core import summarize
     solo = {n: solo_runtime(s, FIFO, seed=0) for n, s in ERCBENCH.items()}
     # a representative subset to keep test time low

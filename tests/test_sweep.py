@@ -1,0 +1,157 @@
+"""Sweep-runner tests: cache bit-identity, multiprocess equivalence,
+legacy-path equivalence (SJF/LJF dedup), and open-loop truncation."""
+
+import json
+
+import pytest
+
+from repro.core.metrics import MetricsError
+from repro.core.scenarios import TraceReplay, workload_digest
+from repro.core.simulator import simulate
+from repro.core.policies import make_policy
+from repro.core.sweep import SweepSpec, run_sweep, solo_runtime_cached
+from repro.core.workload import ERCBENCH, reorder_for_oracle, scaled_spec
+
+#: Tiny kernels: real ERCBench structure, two orders of magnitude cheaper.
+TINY = {
+    "JPEG-d": scaled_spec(ERCBENCH["JPEG-d"], num_blocks=48, mean_t=900.0),
+    "SAD": scaled_spec(ERCBENCH["SAD"], num_blocks=64, mean_t=1500.0),
+    "AES-e": scaled_spec(ERCBENCH["AES-e"], num_blocks=30, mean_t=700.0),
+}
+
+TRACE = [
+    {"kernel": "SAD", "time": 0.0},
+    {"kernel": "JPEG-d", "time": 100.0},
+    {"kernel": "AES-e", "time": 2_000.0},
+]
+
+
+def tiny_scenario(name="tiny"):
+    return TraceReplay(trace=TRACE, specs=TINY, name=name)
+
+
+def spec_for(policies, **kw):
+    return SweepSpec(scenarios=(tiny_scenario(),), policies=tuple(policies),
+                     **kw)
+
+
+def cells_key(result):
+    return [(c.scenario, c.workload, c.policy, c.predictor, c.seed)
+            for c in result.cells]
+
+
+# ------------------------------------------------------------------- cache
+def test_cache_hit_returns_bit_identical_metrics(tmp_path):
+    spec = spec_for(("fifo", "srtf"), seeds=(0, 3))
+    cold = run_sweep(spec, cache_dir=tmp_path)
+    assert cold.stats["computed"] == 4 and cold.stats["cache_hits"] == 0
+    warm = run_sweep(spec, cache_dir=tmp_path)
+    assert warm.stats["computed"] == 0
+    assert warm.stats["cache_hits"] == 4
+    for a, b in zip(cold.cells, warm.cells):
+        assert a == b                        # dataclass equality: every float
+        assert a.metrics == b.metrics
+
+
+def test_cache_key_covers_workload_content(tmp_path):
+    spec = spec_for(("fifo",))
+    run_sweep(spec, cache_dir=tmp_path)
+    # Same kernels, shifted arrival: different digest => a fresh cell.
+    moved = TraceReplay(trace=[dict(e, time=e["time"] + 1.0) for e in TRACE],
+                        specs=TINY, name="tiny")
+    r2 = run_sweep(SweepSpec(scenarios=(moved,), policies=("fifo",)),
+                   cache_dir=tmp_path)
+    assert r2.stats["computed"] == 1
+
+
+def test_cache_files_are_content_addressed_json(tmp_path):
+    run_sweep(spec_for(("fifo",)), cache_dir=tmp_path)
+    files = list(tmp_path.glob("*.json"))
+    assert files  # cell + solo entries
+    for f in files:
+        assert len(f.stem) == 64  # sha256 hex
+        json.loads(f.read_text())  # valid JSON
+
+
+def test_solo_runtime_cached_roundtrip(tmp_path):
+    a = solo_runtime_cached(TINY["JPEG-d"], seed=0, cache_dir=tmp_path)
+    b = solo_runtime_cached(TINY["JPEG-d"], seed=0, cache_dir=tmp_path)
+    assert a == b > 0.0
+
+
+# -------------------------------------------------------------- parallelism
+def test_multiprocess_results_equal_serial():
+    spec = spec_for(("fifo", "mpmax", "srtf"), seeds=(0, 1))
+    serial = run_sweep(spec, jobs=1)
+    parallel = run_sweep(spec, jobs=2)
+    assert cells_key(serial) == cells_key(parallel)
+    assert serial.cells == parallel.cells
+
+
+# ------------------------------------------------------- legacy equivalence
+def test_cells_match_direct_simulation():
+    spec = spec_for(("fifo", "srtf"))
+    result = run_sweep(spec)
+    solo = {n: solo_runtime_cached(s) for n, s in TINY.items()}
+    (_, arrivals), = tiny_scenario().workloads()
+    for policy in ("fifo", "srtf"):
+        res = simulate(arrivals, lambda: make_policy(policy), seed=0,
+                       oracle_runtimes=solo)
+        cell, = result.select(policy=policy)
+        assert cell.turnaround == res.turnaround
+
+
+def test_sjf_dedups_onto_fifo_of_reordered_workload(tmp_path):
+    spec = spec_for(("fifo", "sjf", "ljf"))
+    result = run_sweep(spec, cache_dir=tmp_path)
+    # 3 labelled cells, but sjf/ljf are FIFO over reordered arrivals; with
+    # this trace the SJF order differs from FIFO's, LJF's matches neither.
+    assert result.stats["cells"] == 3
+    assert result.stats["computed"] == len(
+        {workload_digest(reorder_for_oracle(
+            tiny_scenario().workloads()[0][1],
+            {n: solo_runtime_cached(s) for n, s in TINY.items()},
+            longest_first=lf)) for lf in (False, True)} | {
+         workload_digest(tiny_scenario().workloads()[0][1])})
+    sjf_cell, = result.select(policy="sjf")
+    solo = {n: solo_runtime_cached(s) for n, s in TINY.items()}
+    (_, arrivals), = tiny_scenario().workloads()
+    reordered = reorder_for_oracle(arrivals, solo)
+    res = simulate(reordered, lambda: make_policy("fifo"), seed=0,
+                   oracle_runtimes=solo)
+    assert sjf_cell.turnaround == res.turnaround
+
+
+# ------------------------------------------------------------ open loop
+def test_truncated_sweep_reports_unfinished_first_class():
+    spec = spec_for(("fifo",), until=1_500.0)
+    cell, = run_sweep(spec).cells
+    assert cell.unfinished                      # AES-e arrives at t=2000
+    assert "AES-e#2" in cell.unfinished
+    assert cell.window.n_unfinished == len(cell.unfinished)
+    assert cell.window.end_time <= 1_500.0
+    assert cell.window.makespan == cell.window.end_time
+    assert 0.0 <= cell.window.utilization <= 1.0 + 1e-9
+
+
+def test_summary_over_selected_cells():
+    spec = spec_for(("fifo", "srtf"))
+    result = run_sweep(spec)
+    m = result.summary(policy="fifo")
+    assert m.stp > 0 and m.antt >= 1.0
+    with pytest.raises(MetricsError):
+        result.summary(policy="mpmax")          # not in the sweep
+
+
+def test_cache_version_is_part_of_the_key(tmp_path):
+    import repro.core.sweep as sweep_mod
+    run_sweep(spec_for(("fifo",)), cache_dir=tmp_path)
+    n_before = len(list(tmp_path.glob("*.json")))
+    old = sweep_mod.CACHE_VERSION
+    sweep_mod.CACHE_VERSION = old + 1000
+    try:
+        r = run_sweep(spec_for(("fifo",)), cache_dir=tmp_path)
+        assert r.stats["cache_hits"] == 0       # version bump invalidates
+        assert len(list(tmp_path.glob("*.json"))) > n_before
+    finally:
+        sweep_mod.CACHE_VERSION = old
