@@ -27,9 +27,15 @@ smoke-sweep:
 	$(PY) -m benchmarks.run fig01 table5 scenarios --jobs 2 --subset 4 \
 	    --no-cache
 
+# Executor-machine sweep smoke: the real-JAX lane executor driven through
+# SweepSpec/run_sweep (tiny grid, spawn-pool fan-out, measured cells).
+smoke-sweep-executor:
+	$(PY) -m benchmarks.run --machine executor --jobs 2 --subset 1 \
+	    --no-cache
+
 check: test smoke
 
-check-all: test-all smoke smoke-sweep
+check-all: test-all smoke smoke-sweep smoke-sweep-executor
 
 # Regenerate the golden-trace fixture (ONLY when a schedule change is
 # intended and reviewed; tests/test_golden_traces.py pins the current one).

@@ -82,14 +82,25 @@ class _SubsetScenario(Scenario):
 
 
 def sweep(scenarios, policies, predictors=(None,), seeds=(SEED,),
-          until=None) -> SweepResult:
-    """Run one sweep under the module's configuration (jobs/cache/subset)."""
+          until=None, machine="des", n_sm=None,
+          time_scale=None) -> SweepResult:
+    """Run one sweep under the module's configuration (jobs/cache/subset).
+
+    ``machine="executor"`` drives the cells through the real-JAX lane
+    executor (``n_sm`` is then the lane count); see
+    :mod:`repro.core.sweep`.
+    """
     scenarios = tuple(
         s if SUBSET is None else _SubsetScenario(s, SUBSET)
         for s in scenarios)
+    kwargs = {}
+    if n_sm is not None:
+        kwargs["n_sm"] = n_sm
+    if time_scale is not None:
+        kwargs["time_scale"] = time_scale
     spec = SweepSpec(scenarios=scenarios, policies=tuple(policies),
                      predictors=tuple(predictors), seeds=tuple(seeds),
-                     until=until)
+                     until=until, machine=machine, **kwargs)
     return run_sweep(spec, jobs=JOBS, cache_dir=CACHE_DIR)
 
 
@@ -156,6 +167,22 @@ def table5_summary(seed: int = SEED) -> Dict[str, WorkloadMetrics]:
     return {pol: result.summary(policy=pol) for pol in TABLE5_SWEEP_POLICIES}
 
 
+#: Seeds for the multi-seed spread rows (each reseeds the simulator's
+#: per-kernel noise streams; pair-stagger arrivals are deterministic).
+TABLE5_CI_SEEDS = (0, 1, 2)
+
+#: Policies worth a spread row (the headline FIFO -> SRTF comparison).
+TABLE5_CI_POLICIES = ("fifo", "srtf")
+
+
+@functools.lru_cache(maxsize=None)
+def table5_ci_result(seeds: Tuple[int, ...] = TABLE5_CI_SEEDS) -> SweepResult:
+    """The Table-5 grid swept across noise seeds (for ``summary_ci``);
+    seed-0 FIFO/SRTF cells are shared with :func:`table5_result` through
+    the content-addressed cache."""
+    return sweep((PairStagger(seed=SEED),), TABLE5_CI_POLICIES, seeds=seeds)
+
+
 def linear_fit_end_prediction(end_times: np.ndarray) -> float:
     """Predict kernel finish time by least-squares fit of block end times
     against block rank (the paper's 'linear regression' predictor)."""
@@ -177,3 +204,16 @@ def metric_row(prefix: str, m: WorkloadMetrics) -> Tuple[str, str]:
     """Uniform ``name,derived`` row for an STP/ANTT/fairness triple."""
     return (prefix,
             f"stp={m.stp:.2f};antt={m.antt:.2f};fair={m.fairness:.2f}")
+
+
+def metric_ci_row(prefix: str, ci) -> Tuple[str, str]:
+    """``name,derived`` row for a :class:`~repro.core.sweep.MetricsCI`:
+    geomean with the min..max seed spread in brackets."""
+
+    def band(t: Tuple[float, float, float]) -> str:
+        return f"{t[0]:.2f}[{t[1]:.2f},{t[2]:.2f}]"
+
+    return (prefix,
+            f"stp={band(ci.stp)};antt={band(ci.antt)};"
+            f"fair={band(ci.fairness)} "
+            f"(geomean[min,max] across {ci.n_seeds} seeds)")

@@ -1,86 +1,92 @@
 """Real-JAX lane-executor policy benchmark (implementation).
 
-Concurrent jobs running ACTUAL jit-compiled model steps (reduced configs of
-the assigned architectures) are scheduled under each policy; STP/ANTT/
-fairness use measured solo runtimes.  This is the hardware-in-the-loop
-analogue of Table 5: block durations are real measurements, lane
-parallelism is virtual time (one physical CPU device).
+Concurrent jobs running ACTUAL jit-compiled block computations are
+scheduled under each policy; STP/ANTT/fairness use measured solo runtimes.
+This is the hardware-in-the-loop analogue of Table 5: block durations are
+real wall-clock measurements, lane parallelism is virtual time (one
+physical CPU device).
 
-The executor is driven through the formal ``Machine`` protocol, so the
-predictor is pluggable: the first scenario additionally runs SRTF under the
-EWMA baseline predictor to expose what Simple Slicing's slice-boundary
-resampling buys on real measurements.
+The table is rendered from executor-machine
+:class:`~repro.core.sweep.SweepSpec` sweeps over a trace-replay scenario:
+the scenario's kernel grids are bridged to jobs of real jitted blocks
+(:func:`repro.core.scenarios.executor_workload`), solo baselines go through
+the content-addressed sweep cache (reused across runs), and cells are
+re-measured each run (nonce-keyed — see DESIGN.md Section 6).  The main
+sweep crosses every policy with the default predictor; a second SRTF-only
+sweep under the EWMA baseline predictor (sharing solo baselines through
+the cache) exposes what Simple Slicing's slice-boundary resampling buys on
+real measurements — every measured cell is rendered, none discarded.
 """
 
 from __future__ import annotations
 
-from repro.configs import get_arch
-from repro.core.executor import LaneExecutor
-from repro.core.jobs import make_serve_job, make_train_job
-from repro.core.metrics import evaluate
-from repro.core.policies import make_policy
+from repro.core.predictor import DEFAULT_PREDICTOR
+from repro.core.scenarios import TraceReplay
+from repro.core.workload import ERCBENCH, scaled_spec
 
-from .common import metric_row
+from .common import metric_row, sweep
 
 N_LANES = 4
 POLICY_NAMES = ("fifo", "mpmax", "srtf", "srtf-adaptive")
 
-#: (name, job builder list) — long job first, short job second (the
-#: FIFO-pessimal order, paper Section 2).
-def _scenarios():
-    def serve(arch, blocks, arrival, seed):
-        return lambda: make_serve_job(
-            get_arch(arch).reduced(), arch, blocks=blocks,
-            tokens_per_block=16, batch=2, prompt_len=16,
-            max_residency=N_LANES, arrival=arrival, seed=seed)
+#: Reduced grids with the old benchmark's structure: a long job first and a
+#: short job arriving while it runs (the FIFO-pessimal order, paper
+#: Section 2), plus a medium co-runner for the second workload.
+SPECS = {
+    "long": scaled_spec(ERCBENCH["SAD"], name="long", num_blocks=48,
+                        mean_t=30_000.0),
+    "short": scaled_spec(ERCBENCH["JPEG-d"], name="short", num_blocks=6,
+                         mean_t=5_000.0),
+    "medium": scaled_spec(ERCBENCH["AES-e"], name="medium", num_blocks=32,
+                          mean_t=14_000.0),
+}
 
-    def train(arch, blocks, arrival, seed):
-        return lambda: make_train_job(
-            get_arch(arch).reduced(), arch, blocks=blocks, batch=4, seq=64,
-            max_residency=N_LANES, arrival=arrival, seed=seed)
-
-    return [
-        ("serve_long+serve_short",
-         [serve("minicpm3-4b", 48, 0.0, 0), serve("yi-6b", 6, 0.005, 1)]),
-        ("train_long+serve_short",
-         [train("mamba2-2.7b", 32, 0.0, 2), serve("yi-6b", 6, 0.005, 3)]),
-    ]
-
-
-def _solo(builder) -> float:
-    job = builder()
-    res = LaneExecutor([job], make_policy("fifo"), n_lanes=N_LANES).run()
-    return next(iter(res.values())).turnaround
+#: Two workloads, each long-first + short-later (arrival cycles map to
+#: seconds through the sweep's ``time_scale``).
+TRACE = {
+    "workloads": [
+        {"name": "long+short", "arrivals": [
+            {"kernel": "long", "time": 0.0},
+            {"kernel": "short", "time": 5_000.0},
+        ]},
+        {"name": "medium+short", "arrivals": [
+            {"kernel": "medium", "time": 0.0},
+            {"kernel": "short", "time": 5_000.0},
+        ]},
+    ],
+}
 
 
-def _run_multi(builders, policy, solo, predictor="simple-slicing"):
-    ex = LaneExecutor([b() for b in builders], make_policy(policy),
-                      n_lanes=N_LANES, predictor=predictor)
-    ex.oracle_runtimes.update(solo)
-    results = ex.run()
-    turnaround = {k: r.turnaround for k, r in results.items()}
-    # Job keys are "{arch}#{order}": split on the last '#' for the arch.
-    solo_map = {k: solo[k.rsplit("#", 1)[0]] for k in turnaround}
-    return evaluate(turnaround, solo_map)
+def _scenario() -> TraceReplay:
+    return TraceReplay(trace=TRACE, specs=SPECS, name="executor-pairs")
 
 
 def run_impl():
+    result = sweep((_scenario(),), POLICY_NAMES,
+                   predictors=(DEFAULT_PREDICTOR,),
+                   machine="executor", n_sm=N_LANES)
+    # Slice-boundary resampling vs a plain EWMA: only SRTF consults the
+    # predictor, so the EWMA cells are a separate srtf-only sweep (every
+    # cell is a real measurement — don't pay for a full cross product).
+    ewma_result = sweep((_scenario(),), ("srtf",), predictors=("ewma",),
+                        machine="executor", n_sm=N_LANES)
     rows = []
-    for si, (name, builders) in enumerate(_scenarios()):
-        # One warmed solo measurement per job, shared by every policy run.
-        solo = {}
-        for b in builders:
-            job = b()
-            if job.name not in solo:
-                solo[job.name] = _solo(b)
+    # Honor --subset: render whichever workloads actually swept.
+    workloads = [wl["name"] for wl in TRACE["workloads"]
+                 if result.select(workload=wl["name"])]
+    for wl in workloads:
         for policy in POLICY_NAMES:
-            m = _run_multi(builders, policy, solo)
-            rows.append(metric_row(f"executor.{name}.{policy}", m))
-        if si == 0:
-            m = _run_multi(builders, "srtf", solo, predictor="ewma")
-            rows.append(metric_row(f"executor.{name}.srtf+ewma", m))
+            cell, = result.select(workload=wl, policy=policy,
+                                  predictor=DEFAULT_PREDICTOR)
+            rows.append(metric_row(f"executor.{wl}.{policy}", cell.metrics))
+    for wl in workloads:
+        ewma_cell, = ewma_result.select(workload=wl, policy="srtf",
+                                        predictor="ewma")
+        rows.append(metric_row(f"executor.{wl}.srtf+ewma",
+                               ewma_cell.metrics))
     rows.append(("executor.note",
-                 "real jit step measurements; virtual lane time; paper "
-                 "ordering SRTF>FIFO on STP/ANTT expected; srtf+ewma = "
-                 "same policy under the EWMA baseline predictor"))
+                 "real jit block measurements via the scenario->executor "
+                 "bridge; virtual lane time; paper ordering SRTF>FIFO on "
+                 "STP/ANTT expected; srtf+ewma = same policy under the "
+                 "EWMA baseline predictor"))
     return rows

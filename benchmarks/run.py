@@ -10,13 +10,16 @@ Sweep-shaped modules execute through :mod:`repro.core.sweep`:
 * ``--jobs N``      — multiprocess fan-out over sweep cells,
 * ``--cache-dir D`` — content-addressed on-disk result cache (default
   ``artifacts/sweep_cache``; ``--no-cache`` disables it),
-* ``--subset N``    — first N workloads of each scenario (CI smoke).
+* ``--subset N``    — first N workloads of each scenario (CI smoke),
+* ``--machine M``   — only run modules driving this machine (``des`` for
+  the discrete-event simulator, ``executor`` for the real-JAX lane
+  executor; default both).
 
 Usage::
 
     PYTHONPATH=src python -m benchmarks.run [module-substring ...] \
         [--jobs 4] [--cache-dir artifacts/sweep_cache | --no-cache] \
-        [--subset 4]
+        [--subset 4] [--machine des|executor]
 """
 
 from __future__ import annotations
@@ -27,20 +30,22 @@ import sys
 import time
 import traceback
 
+#: (module, machine) — the machine whose results the module renders; the
+#: ``--machine`` flag filters on it.
 MODULES = [
-    "benchmarks.fig01_fifo_luck",
-    "benchmarks.fig03_staircase_trace",
-    "benchmarks.fig04_prediction_accuracy",
-    "benchmarks.fig06_block_durations",
-    "benchmarks.fig07_residency",
-    "benchmarks.fig09_corunner",
-    "benchmarks.fig11_ss_predictor",
-    "benchmarks.table5_policies",
-    "benchmarks.fig14_15_16_per_workload",
-    "benchmarks.table6_arrival_offsets",
-    "benchmarks.scenarios_openloop",
-    "benchmarks.executor_policies",
-    "benchmarks.roofline",
+    ("benchmarks.fig01_fifo_luck", "des"),
+    ("benchmarks.fig03_staircase_trace", "des"),
+    ("benchmarks.fig04_prediction_accuracy", "des"),
+    ("benchmarks.fig06_block_durations", "des"),
+    ("benchmarks.fig07_residency", "des"),
+    ("benchmarks.fig09_corunner", "des"),
+    ("benchmarks.fig11_ss_predictor", "des"),
+    ("benchmarks.table5_policies", "des"),
+    ("benchmarks.fig14_15_16_per_workload", "des"),
+    ("benchmarks.table6_arrival_offsets", "des"),
+    ("benchmarks.scenarios_openloop", "des"),
+    ("benchmarks.executor_policies", "executor"),
+    ("benchmarks.roofline", "des"),
 ]
 
 
@@ -57,6 +62,9 @@ def main() -> None:
                     help="disable the on-disk sweep cache")
     ap.add_argument("--subset", type=int, default=None,
                     help="truncate each scenario to its first N workloads")
+    ap.add_argument("--machine", choices=("des", "executor", "all"),
+                    default="all",
+                    help="only run modules driving this machine")
     args = ap.parse_args()
 
     from benchmarks import common
@@ -70,7 +78,9 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
-    for modname in MODULES:
+    for modname, machine in MODULES:
+        if args.machine != "all" and machine != args.machine:
+            continue
         if args.filters and not any(f in modname for f in args.filters):
             continue
         try:

@@ -11,12 +11,26 @@ is one :class:`~repro.core.sweep.SweepSpec` over the ``pair-stagger``
 scenario, executed by the cached parallel sweep runner.
 """
 
-from .common import TABLE5_POLICIES, metric_row, table5_summary
+from .common import (
+    TABLE5_CI_POLICIES,
+    TABLE5_POLICIES,
+    metric_ci_row,
+    metric_row,
+    table5_ci_result,
+    table5_summary,
+)
 
 
 def run():
     s = table5_summary()
     rows = [metric_row(f"table5.{pol}", s[pol]) for pol in TABLE5_POLICIES]
+
+    # Multi-seed spread (ROADMAP): the same grid re-simulated under
+    # independent noise seeds; geomean with the min..max band per policy.
+    ci_result = table5_ci_result()
+    for pol in TABLE5_CI_POLICIES:
+        rows.append(metric_ci_row(f"table5.ci.{pol}",
+                                  ci_result.summary_ci(policy=pol)))
     # Section 6.2.2 zero-sampling experiment: feed SRTF the true runtimes
     # (no sampling phase); the residual gap to SJF is pure hand-off delay.
     zero = s["srtf-zero"]

@@ -59,6 +59,8 @@ from .metrics import (
 from .scenarios import (
     SCENARIOS,
     Scenario,
+    executor_job,
+    executor_workload,
     make_scenario,
     register_scenario,
     submission_offsets,
@@ -66,10 +68,13 @@ from .scenarios import (
 )
 from .sweep import (
     CellResult,
+    MACHINES,
+    MetricsCI,
     SweepResult,
     SweepSpec,
     run_sweep,
     solo_runtime_cached,
+    solo_runtime_executor_cached,
 )
 from .policies import (
     FIFO,
@@ -119,8 +124,10 @@ __all__ = [
     "KernelRun",
     "KernelSpec",
     "LJF",
+    "MACHINES",
     "MPMax",
     "Machine",
+    "MetricsCI",
     "MachineBase",
     "MachineEvent",
     "MetricsError",
@@ -148,6 +155,8 @@ __all__ = [
     "WorkloadMetrics",
     "evaluate",
     "evaluate_window",
+    "executor_job",
+    "executor_workload",
     "geomean",
     "grants_issue",
     "make_policy",
@@ -159,6 +168,7 @@ __all__ = [
     "simulate",
     "solo_runtime",
     "solo_runtime_cached",
+    "solo_runtime_executor_cached",
     "staircase_blocks_in",
     "staircase_runtime",
     "submission_offsets",

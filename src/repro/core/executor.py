@@ -79,6 +79,28 @@ class _LaneState:
         self.slow_factor = 1.0
 
 
+@dataclass(frozen=True)
+class ExecutorWindow:
+    """Observation-window summary of one executor run.
+
+    The executor-side mirror of :class:`repro.core.simulator.SimResult`'s
+    window fields: per-job turnaround/finish times for jobs that completed
+    inside the window, ``unfinished`` keys (cancelled jobs included) in
+    arrival order, the machine clock at stop (``end_time``), a
+    truncation-safe ``makespan`` and the busy-lane ``utilization``
+    (in-flight blocks clipped at the window edge).  This is the record
+    shape the sweep runner shares between both machines.
+    """
+
+    turnaround: Dict[str, float]
+    finish: Dict[str, float]
+    names: Dict[str, str]
+    unfinished: Tuple[str, ...]
+    end_time: float
+    makespan: float
+    utilization: float
+
+
 @dataclass
 class JobResult:
     key: str
@@ -230,10 +252,44 @@ class LaneExecutor(MachineBase):
         self._dispatch()
         return True
 
-    def run(self) -> Dict[str, JobResult]:
-        while self.step():
-            pass
+    def run(self, until: Optional[float] = None) -> Dict[str, JobResult]:
+        """Drain the event queue; ``until`` truncates at a horizon.
+
+        With ``until`` (seconds of virtual machine time) events past the
+        horizon stay queued and the machine clock stops at the last
+        processed event — the executor analogue of
+        :meth:`repro.core.simulator.Simulator.run`'s open-loop mode.
+        """
+        while self._events:
+            if until is not None and self._events[0][0] > until:
+                break
+            self.step()
         return self.results
+
+    def window(self) -> "ExecutorWindow":
+        """Observation-window view of the machine (see
+        :class:`ExecutorWindow`); call after :meth:`run`."""
+        turnaround: Dict[str, float] = {}
+        finish: Dict[str, float] = {}
+        names: Dict[str, str] = {}
+        unfinished: List[str] = []
+        end_time = self.now
+        for key, run in sorted(self.runs.items(), key=lambda kv: kv[1].order):
+            names[key] = run.spec.name
+            if run.finish_time is None or run.cancelled:
+                unfinished.append(key)
+                continue
+            turnaround[key] = run.finish_time - run.arrival_time
+            finish[key] = run.finish_time
+        busy = sum(max(0.0, min(t1, end_time) - t0)
+                   for _, _, t0, t1 in self.trace if t0 < end_time)
+        util = (busy / (self.n_lanes * end_time)) if end_time > 0.0 else 0.0
+        makespan = end_time if unfinished else max(finish.values(),
+                                                   default=0.0)
+        return ExecutorWindow(
+            turnaround=turnaround, finish=finish, names=names,
+            unfinished=tuple(unfinished), end_time=end_time,
+            makespan=makespan, utilization=util)
 
     def _on_arrival(self, key: str) -> None:
         if self.runs[key].finished:
@@ -323,13 +379,31 @@ class LaneExecutor(MachineBase):
     def _maybe_quarantine(self) -> None:
         if len(self.lane_t_ewma) < max(3, self.n_lanes):
             return
-        vals = sorted(self.lane_t_ewma.values())
+        # The median covers IN-SERVICE lanes only: stale EWMAs of lanes
+        # already failed/quarantined would otherwise anchor it low and let
+        # the 2.5x threshold walk onto every healthy survivor in turn.
+        vals = sorted(ew for idx, ew in self.lane_t_ewma.items()
+                      if not self.sms[idx].failed)
+        if not vals:
+            return
         med = vals[len(vals) // 2]
-        for idx, ew in list(self.lane_t_ewma.items()):
-            lane = self.sms[idx]
-            if (not lane.failed and med > 0
-                    and ew > self.straggler_quarantine * med):
-                lane.failed = True   # quarantined == removed from service
+        if med <= 0:
+            return
+        # Backstop: quarantining the last in-service lane would strand
+        # pending jobs with a drained event queue (the service then awaits
+        # forever), so keep at least one healthy lane no matter how the
+        # EWMAs diverge; candidates go slowest-first.
+        healthy = sum(1 for ln in self.sms if not ln.failed)
+        candidates = sorted(
+            ((ew, idx) for idx, ew in self.lane_t_ewma.items()
+             if not self.sms[idx].failed
+             and ew > self.straggler_quarantine * med),
+            reverse=True)
+        for _, idx in candidates:
+            if healthy <= 1:
+                break
+            self.sms[idx].failed = True   # quarantined == out of service
+            healthy -= 1
 
 
 def solo_runtime_executor(job: ExecutorJob, policy_factory,

@@ -38,14 +38,17 @@ Built-in scenarios:
 
 from __future__ import annotations
 
+import functools
 import itertools
 import json
+import math
 import zlib
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
 
 import numpy as np
 
+from .executor import ExecutorJob
 from .workload import (
     Arrival,
     ERCBENCH,
@@ -390,6 +393,98 @@ class TraceReplay(Scenario):
         return [(self.workload_name, self._arrivals(data))]
 
 
+# ------------------------------------------------------- executor bridge
+#: Seconds of executor (lane) time per scenario cycle.  Chosen so that the
+#: cycle-scale arrival gaps the scenarios emit (hundreds to a few thousand
+#: cycles) land in the same regime as real measured block durations
+#: (fractions of a millisecond on this container).
+DEFAULT_EXECUTOR_TIME_SCALE = 1e-6
+
+
+def _synthetic_shape(spec: KernelSpec) -> Tuple[int, int]:
+    """Deterministic (matrix dim, repeat count) for one kernel spec.
+
+    The dim follows the grid's per-block parallelism (``threads_per_block``)
+    and the repeat count the block-duration scale (``mean_t``), so distinct
+    specs get distinct real costs and the SJF/SRTF orderings over synthetic
+    jobs remain meaningful.
+    """
+    dim = max(16, min(128, int(spec.threads_per_block)))
+    reps = max(1, min(6, int(math.log10(max(float(spec.mean_t), 10.0)))))
+    return dim, reps
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_block(dim: int, reps: int):
+    """One jit-compiled synthetic block body, shared by every job with the
+    same shape (compiles once per process)."""
+    import jax
+    import jax.numpy as jnp
+
+    x0 = jnp.linspace(-1.0, 1.0, dim * dim).reshape(dim, dim)
+
+    @jax.jit
+    def step(x):
+        for _ in range(reps):
+            x = jnp.tanh(x @ x) + 0.5 * x
+        return x
+
+    return step, x0
+
+
+def executor_job(arrival: Arrival, *, n_lanes: int = 4,
+                 time_scale: float = DEFAULT_EXECUTOR_TIME_SCALE
+                 ) -> ExecutorJob:
+    """Map one scenario :class:`~repro.core.workload.Arrival` to a
+    schedulable :class:`~repro.core.executor.ExecutorJob`.
+
+    The job keeps the scenario's declared grid (``num_blocks``, residency
+    capped at the lane count) and arrival time (cycles scaled to seconds by
+    ``time_scale``); each block is a REAL jit-compiled computation whose
+    cost is a deterministic function of the spec
+    (:func:`_synthetic_shape`), so executor sweeps measure actual JAX
+    dispatch/compute behavior at scenario-declared sizes.
+    """
+    spec = arrival.spec
+    dim, reps = _synthetic_shape(spec)
+
+    def warmup():
+        import jax
+        step, x0 = _jitted_block(dim, reps)
+        jax.block_until_ready(step(x0))   # compile only; discard result
+
+    def make_block_fn(residency: int):
+        import jax
+        step, x0 = _jitted_block(dim, reps)
+
+        def block():
+            jax.block_until_ready(step(x0))
+
+        return block
+
+    return ExecutorJob(
+        name=spec.name, num_blocks=spec.num_blocks,
+        max_residency=min(spec.max_residency, n_lanes),
+        make_block_fn=make_block_fn,
+        arrival=arrival.time * time_scale,
+        est_block_seconds=float(spec.mean_t),   # SJF fallback ordering only
+        warmup_fn=warmup)
+
+
+def executor_workload(arrivals: Sequence[Arrival], *, n_lanes: int = 4,
+                      time_scale: float = DEFAULT_EXECUTOR_TIME_SCALE
+                      ) -> List[Tuple[str, ExecutorJob]]:
+    """Bridge one scenario workload to ``(key, job)`` pairs.
+
+    Keys are the scenario's arrival uids (``{name}#{i}``) so executor cells
+    carry the same kernel keys as DES cells of the same workload; pass each
+    pair to :meth:`~repro.core.executor.LaneExecutor.add_job` as
+    ``add_job(job, key=key)``.
+    """
+    return [(a.key, executor_job(a, n_lanes=n_lanes, time_scale=time_scale))
+            for a in arrivals]
+
+
 # --------------------------------------------------------------- utilities
 def workload_digest(arrivals: Sequence[Arrival]) -> str:
     """Content digest of one arrival list (the sweep-cache workload key).
@@ -434,8 +529,11 @@ def submission_offsets(scenario: Union[str, Scenario], n: int,
 
 __all__ = [
     "Bursty",
+    "DEFAULT_EXECUTOR_TIME_SCALE",
     "NProgramMix",
     "OPEN_LOOP_MIX",
+    "executor_job",
+    "executor_workload",
     "PairStagger",
     "PoissonOpen",
     "SCENARIOS",

@@ -2,25 +2,49 @@
 multiprocess fan-out.
 
 One :class:`SweepSpec` names the whole grid — scenarios x policies x
-predictors x seeds — and :func:`run_sweep` executes it:
+predictors x seeds, on either **machine** — and :func:`run_sweep`
+executes it:
 
-* **cells** are (workload, policy, predictor, seed) simulations; SJF/LJF
-  are realized the way the paper realizes them (FIFO with oracle-chosen
+* **cells** are (workload, policy, predictor, seed) runs; SJF/LJF are
+  realized the way the paper realizes them (FIFO with oracle-chosen
   arrival order, Section 2), and every cell gets the measured solo
   runtimes as its oracle, exactly like the hand-rolled benchmark loops
   this module replaces;
-* **fan-out**: with ``jobs > 1`` cells run in a process pool (the DES is
-  pure Python, so processes — not threads — buy real parallelism);
+* **machines**: ``machine="des"`` (default) simulates cells on the
+  discrete-event simulator; ``machine="executor"`` drives the same
+  workloads through the real-JAX :class:`~repro.core.executor.LaneExecutor`
+  — each scenario arrival is bridged to a job of actual jit-compiled
+  blocks (:func:`repro.core.scenarios.executor_workload`) and block
+  durations are wall-clock measurements;
+* **fan-out**: with ``jobs > 1`` cells run in a process pool (fork for the
+  pure-Python DES; spawn for executor cells, because forking a process
+  with an initialized JAX runtime can deadlock).  Caveat: concurrent
+  executor cells on one device contend for CPU while their solo baselines
+  were measured serially, biasing measured slowdowns pessimistic — use
+  ``jobs=1`` when measurement fidelity matters more than wall time;
 * **cache**: with ``cache_dir`` every cell and solo-runtime measurement is
   stored content-addressed, keyed by a SHA-256 over the *workload content*
   (every :class:`~repro.core.workload.KernelSpec` field, arrival times,
   uids — see :func:`repro.core.scenarios.workload_digest`), the policy,
-  the resolved predictor name, the simulation seed, machine size, horizon
-  and the solo-runtime oracle.  A warm rerun touches no simulator code and
-  returns bit-identical :class:`~repro.core.metrics.WorkloadMetrics`
-  (floats survive the JSON round-trip exactly).  The key does NOT cover
-  the simulator/policy *code*: bump :data:`CACHE_VERSION` (or clear the
-  cache directory) when a schedule-changing code change is intended.
+  the resolved predictor name, the simulation seed, machine size, horizon,
+  the solo-runtime oracle and a **code fingerprint** (a digest of the
+  schedule-determining sources — simulator/policies/predictor for the DES
+  — so schedule-changing commits auto-invalidate; :data:`CACHE_VERSION`
+  stays as the manual override).  A warm DES rerun touches no simulator
+  code and returns bit-identical
+  :class:`~repro.core.metrics.WorkloadMetrics` (floats survive the JSON
+  round-trip exactly; NaN is encoded as ``null`` on disk and decoded back,
+  keeping every cache record standard JSON).
+
+Executor cells are **measurements**, not pure functions: their records
+carry ``measured: true`` and their cell keys fold in a per-run nonce, so
+every :func:`run_sweep` invocation re-measures cells (in-run SJF/FIFO
+dedup still applies) instead of pretending wall-time is bit-reproducible;
+their records stay in memory and are never persisted (a nonce-keyed file
+could not be read back).
+Executor *solo* runtimes are deterministic cache keys (spec content +
+lane count + code fingerprint) and ARE reused across runs — rerunning an
+executor sweep skips the solo-baseline measurements.
 
 Open-loop runs are first-class: cells carry
 :class:`~repro.core.metrics.WindowMetrics` (completion-window STP/ANTT/
@@ -33,13 +57,17 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
+import multiprocessing
 import os
 import time
+import uuid
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from .executor import solo_runtime_executor
 from .metrics import (
     MetricsError,
     WindowMetrics,
@@ -49,13 +77,26 @@ from .metrics import (
 )
 from .policies import make_policy
 from .predictor import DEFAULT_PREDICTOR
-from .scenarios import Scenario, make_scenario, workload_digest
+from .scenarios import (
+    DEFAULT_EXECUTOR_TIME_SCALE,
+    Scenario,
+    executor_job,
+    executor_workload,
+    make_scenario,
+    workload_digest,
+)
 from .simulator import simulate, solo_runtime
 from .workload import Arrival, KernelSpec, N_SM, reorder_for_oracle
 
 #: Bump when simulator/policy/predictor changes intentionally alter
 #: schedules: cached cells are only valid for the code that produced them.
+#: (Schedule-changing *commits* are caught automatically by the code
+#: fingerprint in every key — see :func:`_code_fingerprint`; this constant
+#: remains the manual override.)
 CACHE_VERSION = 1
+
+#: The two concrete machines a sweep can target.
+MACHINES = ("des", "executor")
 
 #: Policies realized as FIFO over an oracle-reordered arrival list.
 ORACLE_ORDER_POLICIES = ("sjf", "ljf")
@@ -72,8 +113,14 @@ class SweepSpec:
     ``scenarios`` holds registered names and/or :class:`Scenario`
     instances (names are constructed with default parameters).  ``seeds``
     are *sweep* seeds: each reseeds the scenario's arrival draws and the
-    simulator's noise streams coherently.  ``until`` (cycles) truncates
-    every cell at an observation horizon — the open-loop mode.
+    simulator's noise streams coherently.  ``until`` truncates every cell
+    at an observation horizon — the open-loop mode (cycles on the DES,
+    seconds of lane time on the executor).
+
+    ``machine`` selects the cell substrate: ``"des"`` (discrete-event
+    simulator) or ``"executor"`` (real-JAX lane executor; ``n_sm`` is then
+    the lane count and ``time_scale`` maps scenario cycles to seconds of
+    arrival time — see :func:`repro.core.scenarios.executor_workload`).
     """
 
     scenarios: Tuple[Union[str, Scenario], ...]
@@ -82,12 +129,17 @@ class SweepSpec:
     seeds: Tuple[int, ...] = (0,)
     n_sm: int = N_SM
     until: Optional[float] = None
+    machine: str = "des"
+    time_scale: float = DEFAULT_EXECUTOR_TIME_SCALE
 
     def __post_init__(self):
         object.__setattr__(self, "scenarios", tuple(self.scenarios))
         object.__setattr__(self, "policies", tuple(self.policies))
         object.__setattr__(self, "predictors", tuple(self.predictors))
         object.__setattr__(self, "seeds", tuple(self.seeds))
+        if self.machine not in MACHINES:
+            raise ValueError(
+                f"unknown machine {self.machine!r}; choose from {MACHINES}")
 
 
 @dataclass(frozen=True)
@@ -104,6 +156,9 @@ class CellResult:
     finish: Dict[str, float]
     unfinished: Tuple[str, ...]
     names: Dict[str, str]          # kernel key -> spec name
+    #: True for executor cells: the numbers are wall-clock measurements of
+    #: real JAX executions, not deterministic simulation outputs.
+    measured: bool = False
 
     @property
     def metrics(self) -> Optional[WorkloadMetrics]:
@@ -122,14 +177,41 @@ class CellResult:
 
         Records are label-free on purpose: an SJF cell and the FIFO cell
         of the mirrored workload are the *same simulation* and share one
-        cache entry; only the labels differ.
+        cache entry; only the labels differ.  NaN window metrics (nothing
+        finished inside the window) are stored as ``null`` on disk —
+        standard JSON — and decoded back to NaN here.
         """
+        window = {k: (float("nan") if v is None else v)
+                  for k, v in record["window"].items()}
         return cls(
-            window=WindowMetrics(**record["window"]),
+            window=WindowMetrics(**window),
             turnaround=dict(record["turnaround"]),
             finish=dict(record["finish"]),
             unfinished=tuple(record["unfinished"]),
-            names=dict(record["names"]), **labels)
+            names=dict(record["names"]),
+            measured=bool(record.get("measured", False)), **labels)
+
+
+@dataclass(frozen=True)
+class MetricsCI:
+    """Multi-seed spread of a sweep summary.
+
+    Each metric is a ``(geomean, min, max)`` triple over the per-seed
+    Table-5-style summaries — the lightweight confidence band the ROADMAP's
+    multi-seed item asks for (min/max, not a parametric interval: seed
+    counts are small and the spread is what readers compare).
+    """
+
+    stp: Tuple[float, float, float]
+    antt: Tuple[float, float, float]
+    fairness: Tuple[float, float, float]
+    n_seeds: int
+
+    @property
+    def point(self) -> WorkloadMetrics:
+        """The centers alone, as a plain :class:`WorkloadMetrics`."""
+        return WorkloadMetrics(
+            stp=self.stp[0], antt=self.antt[0], fairness=self.fairness[0])
 
 
 class SweepResult:
@@ -140,12 +222,14 @@ class SweepResult:
         self.stats = stats
 
     def select(self, scenario: Optional[str] = None,
+               workload: Optional[str] = None,
                policy: Optional[str] = None,
                predictor: Optional[str] = None,
                seed: Optional[int] = None) -> List[CellResult]:
         return [
             c for c in self.cells
             if (scenario is None or c.scenario == scenario)
+            and (workload is None or c.workload == workload)
             and (policy is None or c.policy == policy)
             and (predictor is None or c.predictor == predictor)
             and (seed is None or c.seed == seed)
@@ -163,14 +247,79 @@ class SweepResult:
             antt=geomean(m.antt for m in ms),
             fairness=geomean(m.fairness for m in ms))
 
+    def summary_ci(self, **filters) -> MetricsCI:
+        """Multi-seed spread: per-seed :meth:`summary`, aggregated to
+        geomean ± min/max per metric (see :class:`MetricsCI`)."""
+        seeds = sorted({c.seed for c in self.select(**filters)})
+        if not seeds:
+            raise MetricsError(f"no cells match {filters!r}")
+        per_seed = [self.summary(**{**filters, "seed": s}) for s in seeds]
+
+        def agg(values) -> Tuple[float, float, float]:
+            vals = list(values)
+            return (geomean(vals), min(vals), max(vals))
+
+        return MetricsCI(
+            stp=agg(m.stp for m in per_seed),
+            antt=agg(m.antt for m in per_seed),
+            fairness=agg(m.fairness for m in per_seed),
+            n_seeds=len(seeds))
+
     def unfinished_total(self, **filters) -> int:
         return sum(c.window.n_unfinished for c in self.select(**filters))
 
 
 # ----------------------------------------------------------------- cache
+def _nan_to_null(obj):
+    """Replace float NaN with ``None``, recursively.
+
+    ``json.dumps`` would otherwise emit the non-standard ``NaN`` token
+    (rejected by strict parsers) into cache records and digest payloads;
+    nothing-finished cells carry NaN STP/ANTT/fairness by design.
+    """
+    if isinstance(obj, float):
+        return None if math.isnan(obj) else obj
+    if isinstance(obj, dict):
+        return {k: _nan_to_null(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_nan_to_null(v) for v in obj]
+    return obj
+
+
 def _canonical_digest(payload: dict) -> str:
-    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    blob = json.dumps(_nan_to_null(payload), sort_keys=True,
+                      separators=(",", ":"), allow_nan=False)
     return hashlib.sha256(blob.encode()).hexdigest()
+
+
+#: Result-determining source files per machine: any edit to these changes
+#: every cache key, so result-changing commits auto-invalidate without a
+#: manual CACHE_VERSION bump.  machine.py/events.py carry SchedulerCore's
+#: dispatch logic and the decision types; workload.py holds the DES
+#: duration model (KernelSpec.duration/base_t); scenarios.py holds the
+#: executor bridge's block-cost mapping (_synthetic_shape/_jitted_block).
+#: Over-invalidation (e.g. an unrelated scenario edit) merely recomputes;
+#: under-invalidation silently serves stale numbers.
+_FINGERPRINT_SOURCES: Dict[str, Tuple[str, ...]] = {
+    "des": ("simulator", "machine", "events", "policies", "predictor",
+            "workload"),
+    "executor": ("executor", "machine", "events", "policies", "predictor",
+                 "workload", "scenarios"),
+}
+
+_code_fp_memo: Dict[str, str] = {}
+
+
+def _code_fingerprint(machine: str = "des") -> str:
+    """Digest of the sources whose behavior cached results depend on."""
+    fp = _code_fp_memo.get(machine)
+    if fp is None:
+        h = hashlib.sha256()
+        for modname in _FINGERPRINT_SOURCES[machine]:
+            h.update(Path(__file__).with_name(f"{modname}.py").read_bytes())
+        fp = h.hexdigest()[:16]
+        _code_fp_memo[machine] = fp
+    return fp
 
 
 def _cache_read(cache_dir: Optional[Path], key: str) -> Optional[dict]:
@@ -189,7 +338,8 @@ def _cache_write(cache_dir: Optional[Path], key: str, record: dict) -> None:
     cache_dir.mkdir(parents=True, exist_ok=True)
     path = cache_dir / f"{key}.json"
     tmp = cache_dir / f".{key}.{os.getpid()}.tmp"
-    tmp.write_text(json.dumps(record, sort_keys=True))
+    tmp.write_text(json.dumps(_nan_to_null(record), sort_keys=True,
+                              allow_nan=False))
     os.replace(tmp, path)  # atomic under concurrent writers
 
 
@@ -200,6 +350,7 @@ def solo_runtime_cached(spec: KernelSpec, seed: int = 0, n_sm: int = N_SM,
     cache_dir = Path(cache_dir) if cache_dir is not None else None
     key = _canonical_digest({
         "version": CACHE_VERSION, "kind": "solo",
+        "code": _code_fingerprint("des"),
         "spec": dataclasses.asdict(spec), "seed": seed, "n_sm": n_sm,
     })
     hit = _cache_read(cache_dir, key)
@@ -211,18 +362,59 @@ def solo_runtime_cached(spec: KernelSpec, seed: int = 0, n_sm: int = N_SM,
     return rt
 
 
+def solo_runtime_executor_cached(
+        spec: KernelSpec, n_lanes: int = 4,
+        time_scale: float = DEFAULT_EXECUTOR_TIME_SCALE,
+        cache_dir: Optional[Union[str, Path]] = None) -> float:
+    """Measured solo runtime of ``spec`` bridged onto the real-JAX lane
+    executor, through the sweep cache.
+
+    Keyed like :func:`solo_runtime_cached` — spec content, machine size and
+    code fingerprint — WITHOUT a per-run nonce: solo baselines are the
+    expensive, stable part of an executor sweep and are deliberately reused
+    across runs (the ``measured`` field marks the record as a wall-clock
+    measurement, so consumers know reuse trades freshness for speed).
+    """
+    cache_dir = Path(cache_dir) if cache_dir is not None else None
+    key = _canonical_digest({
+        "version": CACHE_VERSION, "kind": "solo", "machine": "executor",
+        "measured": True, "code": _code_fingerprint("executor"),
+        "spec": dataclasses.asdict(spec), "n_lanes": n_lanes,
+    })
+    hit = _cache_read(cache_dir, key)
+    if hit is not None:
+        return float(hit["runtime"])
+    job = executor_job(Arrival(spec, 0.0, uid=f"{spec.name}#0"),
+                       n_lanes=n_lanes, time_scale=time_scale)
+    rt = solo_runtime_executor(job, lambda: make_policy("fifo"),
+                               n_lanes=n_lanes)
+    _cache_write(cache_dir, key, {"runtime": rt, "measured": True})
+    return rt
+
+
 def _cell_key(arrivals: Sequence[Arrival], policy: str, predictor: str,
               seed: int, n_sm: int, until: Optional[float],
-              solo: Dict[str, float]) -> str:
+              solo: Dict[str, float], machine: str = "des",
+              nonce: Optional[str] = None,
+              time_scale: Optional[float] = None) -> str:
     # The workload content enters through scenarios.workload_digest — the
     # one canonical payload (spec fields + times + uids) shared with tests
     # and documentation.
-    return _canonical_digest({
-        "version": CACHE_VERSION, "kind": "cell",
+    payload = {
+        "version": CACHE_VERSION, "kind": "cell", "machine": machine,
+        "code": _code_fingerprint(machine),
         "workload": workload_digest(arrivals),
         "policy": policy, "predictor": predictor, "seed": seed,
         "n_sm": n_sm, "until": until, "solo": solo,
-    })
+    }
+    if machine == "executor":
+        # Executor cells are wall-clock measurements: the nonce makes every
+        # run_sweep invocation re-measure (no cross-run hit pretending
+        # bit-identity) while in-run dedup (SJF == FIFO) still applies.
+        payload["measured"] = True
+        payload["nonce"] = nonce
+        payload["time_scale"] = time_scale
+    return _canonical_digest(payload)
 
 
 # ---------------------------------------------------------------- worker
@@ -241,12 +433,8 @@ def _effective(arrivals: Sequence[Arrival], policy: str,
     return list(arrivals), policy
 
 
-def _run_cell(payload: dict) -> dict:
-    """Execute one simulation (module-level: pickles into worker processes).
-
-    The payload carries *effective* arrivals/policy (see :func:`_effective`)
-    and the solo-runtime oracle; the returned record is label-free.
-    """
+def _run_des_cell(payload: dict) -> dict:
+    """One DES simulation, evaluated over its observation window."""
     solo: Dict[str, float] = payload["solo"]
     res = simulate(
         payload["arrivals"],
@@ -262,13 +450,62 @@ def _run_cell(payload: dict) -> dict:
         res.turnaround, solo_by_key, unfinished=res.unfinished,
         end_time=res.end_time, makespan=res.makespan,
         utilization=res.utilization)
-    record = {
+    return {
         "window": dataclasses.asdict(window),
         "turnaround": dict(res.turnaround),
         "finish": dict(res.finish),
         "unfinished": list(res.unfinished),
         "names": dict(res.name),
     }
+
+
+def _run_executor_cell(payload: dict) -> dict:
+    """One real-JAX executor run over the bridged workload.
+
+    Same label-free record shape as the DES path (``window`` / ``turnaround``
+    / ``finish`` / ``unfinished`` / ``names``), plus ``measured: true`` —
+    every float here is a wall-clock measurement.
+    """
+    from .executor import LaneExecutor
+
+    solo: Dict[str, float] = payload["solo"]
+    ex = LaneExecutor([], make_policy(payload["policy"]),
+                      n_lanes=payload["n_sm"],
+                      predictor=payload["predictor"])
+    for key, job in executor_workload(payload["arrivals"],
+                                      n_lanes=payload["n_sm"],
+                                      time_scale=payload["time_scale"]):
+        ex.add_job(job, key=key)
+    ex.oracle_runtimes.update(solo)
+    ex.run(until=payload["until"])
+    w = ex.window()
+    solo_by_key = {k: solo[w.names[k]] for k in w.turnaround}
+    window = evaluate_window(
+        w.turnaround, solo_by_key, unfinished=w.unfinished,
+        end_time=w.end_time, makespan=w.makespan,
+        utilization=w.utilization)
+    return {
+        "window": dataclasses.asdict(window),
+        "turnaround": dict(w.turnaround),
+        "finish": dict(w.finish),
+        "unfinished": list(w.unfinished),
+        "names": dict(w.names),
+        "measured": True,
+    }
+
+
+def _run_cell(payload: dict) -> dict:
+    """Execute one cell (module-level: pickles into worker processes).
+
+    The payload carries *effective* arrivals/policy (see :func:`_effective`)
+    and the solo-runtime oracle; the returned record is label-free.
+    """
+    if payload["machine"] == "executor":
+        # Not written to disk: the key folds in a per-run nonce, so the
+        # record could never be read back — persisting it would only grow
+        # the cache directory without bound.
+        return _run_executor_cell(payload)
+    record = _run_des_cell(payload)
     _cache_write(payload["cache_dir"], payload["key"], record)
     return record
 
@@ -279,6 +516,10 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
     """Execute every cell of ``spec``; see the module docstring."""
     t0 = time.perf_counter()
     cache_dir = Path(cache_dir) if cache_dir is not None else None
+    on_executor = spec.machine == "executor"
+    # Executor cells are measurements: a fresh nonce per run keeps them out
+    # of cross-run cache hits while in-run dedup still works.
+    nonce = uuid.uuid4().hex if on_executor else None
 
     # Materialize workloads once per (scenario, seed) and measure the solo
     # oracle for every kernel they mention (cached; cheap next to cells).
@@ -292,25 +533,48 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
         for seed in spec.seeds:
             scn = base.reseeded(seed)
             workloads = scn.workloads()
-            names = sorted({a.spec.name for _, wl in workloads for a in wl})
-            specs = {a.spec.name: a.spec for _, wl in workloads for a in wl}
-            solo = {}
-            for n in names:
-                memo_key = (specs[n], seed, spec.n_sm)
-                if memo_key not in solo_memo:
-                    solo_memo[memo_key] = solo_runtime_cached(
-                        specs[n], seed=seed, n_sm=spec.n_sm,
-                        cache_dir=cache_dir)
-                solo[n] = solo_memo[memo_key]
             for wl_name, arrivals in workloads:
-                wl_solo = {a.spec.name: solo[a.spec.name] for a in arrivals}
+                # Solo oracles are keyed by *spec content*, not name: two
+                # workloads may reuse a kernel name with different spec
+                # fields, and a name-keyed table would last-write-win and
+                # corrupt the earlier workload's STP/ANTT.  Within one
+                # workload the name must be unambiguous (the machines look
+                # oracles up by spec name), so a same-name conflict there
+                # is an error.
+                wl_specs: Dict[str, KernelSpec] = {}
+                wl_solo: Dict[str, float] = {}
+                for a in arrivals:
+                    name = a.spec.name
+                    prev = wl_specs.get(name)
+                    if prev is not None and prev != a.spec:
+                        raise ValueError(
+                            f"workload {wl_name!r} uses kernel name "
+                            f"{name!r} for two different specs; solo "
+                            "oracles are looked up by name within one "
+                            "workload")
+                    wl_specs[name] = a.spec
+                    memo_key = (a.spec, spec.machine,
+                                None if on_executor else seed, spec.n_sm)
+                    if memo_key not in solo_memo:
+                        if on_executor:
+                            solo_memo[memo_key] = solo_runtime_executor_cached(
+                                a.spec, n_lanes=spec.n_sm,
+                                time_scale=spec.time_scale,
+                                cache_dir=cache_dir)
+                        else:
+                            solo_memo[memo_key] = solo_runtime_cached(
+                                a.spec, seed=seed, n_sm=spec.n_sm,
+                                cache_dir=cache_dir)
+                    wl_solo[name] = solo_memo[memo_key]
                 for policy in spec.policies:
                     eff_arrivals, eff_policy = _effective(
                         arrivals, policy, wl_solo)
                     for pred in spec.predictors:
                         pred_name = DEFAULT_PREDICTOR if pred is None else pred
                         key = _cell_key(eff_arrivals, eff_policy, pred_name,
-                                        seed, spec.n_sm, spec.until, wl_solo)
+                                        seed, spec.n_sm, spec.until, wl_solo,
+                                        machine=spec.machine, nonce=nonce,
+                                        time_scale=spec.time_scale)
                         ordered.append((key, {
                             "scenario": scn.name, "workload": wl_name,
                             "policy": policy, "predictor": pred_name,
@@ -329,12 +593,20 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
                             "policy": eff_policy, "predictor": pred_name,
                             "seed": seed, "n_sm": spec.n_sm,
                             "until": spec.until, "solo": wl_solo,
+                            "machine": spec.machine,
+                            "time_scale": spec.time_scale,
                             "cache_dir": cache_dir,
                         })
 
     if pending:
         if jobs > 1:
-            with ProcessPoolExecutor(max_workers=jobs) as pool:
+            # Fork is fine for the pure-Python DES; executor cells run real
+            # JAX, and forking a process with an initialized JAX runtime
+            # can deadlock — spawn workers instead (they re-import and
+            # re-JIT, which the per-cell compile cost dominates anyway).
+            ctx = multiprocessing.get_context("spawn") if on_executor else None
+            with ProcessPoolExecutor(max_workers=jobs,
+                                     mp_context=ctx) as pool:
                 results = list(pool.map(_run_cell, pending, chunksize=1))
         else:
             results = [_run_cell(p) for p in pending]
@@ -347,7 +619,8 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
         "cells": len(ordered), "cache_hits": hits,
         "computed": len(pending),
         "deduplicated": len(ordered) - len(records),
-        "jobs": jobs, "elapsed_s": time.perf_counter() - t0,
+        "jobs": jobs, "machine": spec.machine,
+        "elapsed_s": time.perf_counter() - t0,
     }
     return SweepResult(cells, stats)
 
@@ -355,8 +628,11 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
 __all__ = [
     "CACHE_VERSION",
     "CellResult",
+    "MACHINES",
+    "MetricsCI",
     "SweepResult",
     "SweepSpec",
     "run_sweep",
     "solo_runtime_cached",
+    "solo_runtime_executor_cached",
 ]

@@ -23,6 +23,17 @@ traffic, ...) is sampled at ``--seed`` and its arrival times, scaled by
 ``--time-scale`` seconds/cycle, pace the async submissions.  Without it,
 jobs arrive every ``--stagger`` seconds (the paper's staggered launches).
 
+With ``--scenario-kernels`` the scenario supplies the *jobs* too, not just
+the pacing: its first workload's arrivals are bridged to jobs of real
+jitted synthetic blocks (:func:`repro.core.scenarios.executor_workload` —
+the same bridge executor sweeps use), and solo baselines go through the
+content-addressed sweep cache
+(:func:`repro.core.sweep.solo_runtime_executor_cached`), so repeated
+serving runs reuse them.  Baselines are keyed by spec content, and
+``--max-blocks`` rewrites the specs before bridging — so they are shared
+with executor *sweeps* only when the grids match (e.g. ``--max-blocks 0``,
+or a scenario whose declared grids are already small).
+
 Example::
 
     PYTHONPATH=src python -m repro.launch.serve \
@@ -30,21 +41,31 @@ Example::
     PYTHONPATH=src python -m repro.launch.serve \
         --jobs yi-6b:8,minicpm3-4b:4,yi-6b:8 --scenario poisson-open \
         --time-scale 2e-7 --policy srtf
+    PYTHONPATH=src python -m repro.launch.serve \
+        --scenario poisson-open --scenario-kernels --policy srtf \
+        --time-scale 1e-6
 """
 
 from __future__ import annotations
 
 import argparse
 import asyncio
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 from repro.configs import ARCHS, get_arch
 from repro.core.executor import LaneExecutor
 from repro.core.jobs import make_serve_job
 from repro.core.metrics import evaluate
 from repro.core.policies import make_policy
-from repro.core.scenarios import SCENARIOS, submission_offsets
+from repro.core.scenarios import (
+    SCENARIOS,
+    executor_job,
+    make_scenario,
+    submission_offsets,
+)
 from repro.core.scheduler_service import SchedulerService
+from repro.core.sweep import solo_runtime_executor_cached
+from repro.core.workload import Arrival, scaled_spec
 
 
 def parse_jobs(args) -> List[Tuple[str, int]]:
@@ -63,8 +84,33 @@ def build_job(args, arch_id: str, blocks: int, seed: int):
         seed=seed, tenant=arch_id)
 
 
-def measure_solo(args) -> Dict[Tuple[str, int], float]:
-    """Measured isolated runtime per (arch, blocks) — the STP/ANTT baseline.
+def scenario_arrivals(args):
+    """First-workload arrivals of the ``--scenario`` arrival process.
+
+    Grids are capped at ``--max-blocks`` before bridging: scenario specs
+    declare simulator-scale grids (thousands of blocks), and every bridged
+    block is a real measured execution — a serving demo wants seconds, not
+    hours.  The cap rescales ``num_blocks`` only; the per-block cost and
+    kernel mix stay scenario-declared.
+    """
+    scn = make_scenario(args.scenario, seed=args.seed)
+    workloads = scn.workloads()
+    if not workloads:
+        raise ValueError(f"scenario {scn.name!r} produced no workloads")
+    arrivals = workloads[0][1]
+    cap = args.max_blocks
+    if cap:
+        arrivals = [
+            Arrival(scaled_spec(a.spec,
+                                num_blocks=min(a.spec.num_blocks, cap)),
+                    a.time, uid=a.uid)
+            for a in arrivals
+        ]
+    return arrivals
+
+
+def measure_solo(args) -> Dict[object, float]:
+    """Measured isolated runtime per distinct job — the STP/ANTT baseline.
 
     One warmed job object per distinct (arch, blocks) item, measured once
     and reused by every policy run: rebuilding a job per policy would
@@ -73,8 +119,16 @@ def measure_solo(args) -> Dict[Tuple[str, int], float]:
     runs of the same invocation.  Keyed by (arch, blocks), not arch alone:
     the same arch listed with a different decode length is a different
     job and needs its own baseline.
+
+    With ``--scenario-kernels`` the baselines are keyed by the scenario's
+    kernel specs and go through the content-addressed sweep cache, shared
+    with executor sweeps of the same scenario.
     """
-    solo: Dict[Tuple[str, int], float] = {}
+    if args.scenario_kernels:
+        return {a.spec: solo_runtime_executor_cached(
+                    a.spec, n_lanes=args.lanes, cache_dir=args.cache_dir)
+                for a in scenario_arrivals(args)}
+    solo: Dict[object, float] = {}
     for arch_id, blocks in parse_jobs(args):
         if (arch_id, blocks) in solo:
             continue                  # one baseline per distinct item
@@ -100,23 +154,48 @@ def submission_schedule(args) -> List[float]:
                               seed=args.seed)
 
 
-async def run_service(args, policy: str, solo: Dict[Tuple[str, int], float]):
+def submission_plan(args, solo: Dict[object, float]
+                    ) -> List[Tuple[float, Callable, str, float]]:
+    """Per-submission ``(offset_s, job_factory, tenant, solo_runtime)``.
+
+    The default path builds arch-model jobs from ``--jobs``; with
+    ``--scenario-kernels`` the scenario's own arrivals are bridged to
+    synthetic real-jitted jobs, keeping its kernel mix and arrival times.
+    """
+    if args.scenario_kernels:
+        return [
+            (a.time * args.time_scale,
+             lambda a=a: executor_job(a, n_lanes=args.lanes,
+                                      time_scale=args.time_scale),
+             a.spec.name, solo[a.spec])
+            for a in scenario_arrivals(args)
+        ]
+    offsets = submission_schedule(args)
+    return [
+        (offsets[i],
+         lambda arch_id=arch_id, blocks=blocks, i=i: build_job(
+             args, arch_id, blocks, args.seed + i),
+         arch_id, solo[(arch_id, blocks)])
+        for i, (arch_id, blocks) in enumerate(parse_jobs(args))
+    ]
+
+
+async def run_service(args, policy: str, solo: Dict[object, float]):
     """One policy run: staggered async submissions against a live service."""
     service = SchedulerService(n_lanes=args.lanes, policy=policy,
                                predictor=args.predictor)
-    offsets = submission_schedule(args)
+    plan = submission_plan(args, solo)
     try:
         handles = []
         solo_by_key: Dict[str, float] = {}
         t0 = asyncio.get_event_loop().time()
-        for i, (arch_id, blocks) in enumerate(parse_jobs(args)):
-            delay = t0 + offsets[i] - asyncio.get_event_loop().time()
+        for offset, job_factory, tenant, solo_rt in plan:
+            delay = t0 + offset - asyncio.get_event_loop().time()
             if delay > 0:
                 await asyncio.sleep(delay)  # late arrival, busy machine
-            job = build_job(args, arch_id, blocks, args.seed + i)
-            handle = service.submit(job, tenant=arch_id,
-                                    solo_runtime=solo[(arch_id, blocks)])
-            solo_by_key[handle.key] = solo[(arch_id, blocks)]
+            handle = service.submit(job_factory(), tenant=tenant,
+                                    solo_runtime=solo_rt)
+            solo_by_key[handle.key] = solo_rt
             handles.append(handle)
         results = [await h.result() for h in handles]
     finally:
@@ -163,8 +242,20 @@ def main() -> None:
     ap.add_argument("--time-scale", type=float, default=1e-6,
                     help="seconds of wall time per scenario cycle "
                          "(with --scenario)")
+    ap.add_argument("--scenario-kernels", action="store_true",
+                    help="with --scenario: take the jobs themselves from "
+                         "the scenario via the executor bridge (synthetic "
+                         "real-jitted blocks) instead of --jobs archs")
+    ap.add_argument("--cache-dir", default="artifacts/sweep_cache",
+                    help="sweep cache for --scenario-kernels solo "
+                         "baselines (shared with executor sweeps)")
+    ap.add_argument("--max-blocks", type=int, default=16,
+                    help="cap scenario grids at this many real blocks per "
+                         "job (with --scenario-kernels; 0 = uncapped)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.scenario_kernels and not args.scenario:
+        ap.error("--scenario-kernels requires --scenario")
     solo = measure_solo(args)
     m = run_policy(args, args.policy, solo)
     if args.compare_fifo and args.policy != "fifo":

@@ -1,16 +1,25 @@
 """Sweep-runner tests: cache bit-identity, multiprocess equivalence,
-legacy-path equivalence (SJF/LJF dedup), and open-loop truncation."""
+legacy-path equivalence (SJF/LJF dedup), open-loop truncation, NaN-safe
+cache encoding, code-fingerprint invalidation, spec-content solo keying
+and multi-seed spread summaries."""
 
 import json
+import math
 
 import pytest
 
-from repro.core.metrics import MetricsError
-from repro.core.scenarios import TraceReplay, workload_digest
+from repro.core.metrics import MetricsError, geomean
+from repro.core.scenarios import Scenario, TraceReplay, workload_digest
 from repro.core.simulator import simulate
 from repro.core.policies import make_policy
 from repro.core.sweep import SweepSpec, run_sweep, solo_runtime_cached
-from repro.core.workload import ERCBENCH, reorder_for_oracle, scaled_spec
+from repro.core.workload import (
+    Arrival,
+    ERCBENCH,
+    KernelSpec,
+    reorder_for_oracle,
+    scaled_spec,
+)
 
 #: Tiny kernels: real ERCBench structure, two orders of magnitude cheaper.
 TINY = {
@@ -155,3 +164,110 @@ def test_cache_version_is_part_of_the_key(tmp_path):
         assert len(list(tmp_path.glob("*.json"))) > n_before
     finally:
         sweep_mod.CACHE_VERSION = old
+
+
+def test_code_fingerprint_is_part_of_the_key(tmp_path, monkeypatch):
+    """A schedule-changing commit (different simulator/policy/predictor
+    source) must invalidate cached cells without a CACHE_VERSION bump."""
+    import repro.core.sweep as sweep_mod
+    warm = run_sweep(spec_for(("fifo",)), cache_dir=tmp_path)
+    assert warm.stats["computed"] == 1
+    assert run_sweep(spec_for(("fifo",)),
+                     cache_dir=tmp_path).stats["cache_hits"] == 1
+    monkeypatch.setitem(sweep_mod._code_fp_memo, "des", "0" * 16)
+    r = run_sweep(spec_for(("fifo",)), cache_dir=tmp_path)
+    assert r.stats["cache_hits"] == 0
+    assert r.stats["computed"] == 1
+
+
+# ------------------------------------------------------------ NaN encoding
+def test_nothing_finished_cell_roundtrips_as_standard_json(tmp_path):
+    """A fully-truncated cell has NaN STP/ANTT/fairness; the cache must
+    store them as ``null`` (json.dumps would otherwise emit non-standard
+    ``NaN`` tokens) and decode them back to NaN on a warm hit."""
+    spec = spec_for(("fifo",), until=10.0)    # nothing finishes by t=10
+    cold = run_sweep(spec, cache_dir=tmp_path)
+    cell, = cold.cells
+    assert cell.window.n_finished == 0
+    assert math.isnan(cell.window.stp)
+
+    def reject_constant(value):              # NaN/Infinity/-Infinity
+        raise AssertionError(f"non-standard JSON token {value!r} on disk")
+
+    for f in tmp_path.glob("*.json"):
+        text = f.read_text()
+        assert "NaN" not in text
+        json.loads(text, parse_constant=reject_constant)
+
+    warm = run_sweep(spec, cache_dir=tmp_path)
+    assert warm.stats["cache_hits"] == 1
+    wcell, = warm.cells
+    assert math.isnan(wcell.window.stp)
+    assert math.isnan(wcell.window.antt)
+    assert math.isnan(wcell.window.fairness)
+    assert wcell.window.n_finished == 0
+    assert wcell.metrics is None
+    assert wcell.unfinished == cell.unfinished
+
+
+# ------------------------------------------------- solo keyed by content
+K_SMALL = KernelSpec("K", num_blocks=20, max_residency=4,
+                     threads_per_block=64, mean_t=500.0)
+K_BIG = KernelSpec("K", num_blocks=80, max_residency=4,
+                   threads_per_block=64, mean_t=4000.0)
+
+
+class _SameNameTwoSpecs(Scenario):
+    """Two workloads reusing the kernel *name* with different spec fields."""
+
+    name = "same-name-two-specs"
+
+    def workloads(self):
+        return [("wl-small", [Arrival(K_SMALL, 0.0, uid="K#0")]),
+                ("wl-big", [Arrival(K_BIG, 0.0, uid="K#0")])]
+
+
+class _SameNameConflict(Scenario):
+    """One workload using the same name for two different specs — the
+    oracle lookup (by name) would be ambiguous; must be rejected."""
+
+    name = "same-name-conflict"
+
+    def workloads(self):
+        return [("bad", [Arrival(K_SMALL, 0.0, uid="K#0"),
+                         Arrival(K_BIG, 100.0, uid="K#1")])]
+
+
+def test_solo_oracle_keyed_by_spec_content_not_name():
+    """Pre-fix, the scenario-wide name->spec table last-write-wins: the
+    earlier workload's STP/ANTT were computed against the LATER spec's
+    solo runtime.  A single-kernel workload must always score STP == 1."""
+    spec = SweepSpec(scenarios=(_SameNameTwoSpecs(),), policies=("fifo",))
+    result = run_sweep(spec)
+    for cell in result.cells:
+        assert cell.metrics is not None
+        assert cell.metrics.stp == pytest.approx(1.0)
+        assert cell.metrics.antt == pytest.approx(1.0)
+
+
+def test_same_name_conflict_within_one_workload_is_an_error():
+    spec = SweepSpec(scenarios=(_SameNameConflict(),), policies=("fifo",))
+    with pytest.raises(ValueError, match="two different specs"):
+        run_sweep(spec)
+
+
+# ------------------------------------------------------------- multi-seed
+def test_summary_ci_reports_geomean_and_seed_spread():
+    spec = spec_for(("fifo", "srtf"), seeds=(0, 1, 2))
+    result = run_sweep(spec)
+    ci = result.summary_ci(policy="srtf")
+    assert ci.n_seeds == 3
+    per_seed = [result.summary(policy="srtf", seed=s).stp for s in (0, 1, 2)]
+    assert ci.stp[0] == pytest.approx(geomean(per_seed))
+    assert ci.stp[1] == min(per_seed)
+    assert ci.stp[2] == max(per_seed)
+    assert ci.stp[1] <= ci.stp[0] <= ci.stp[2]
+    assert ci.antt[1] <= ci.antt[0] <= ci.antt[2]
+    assert ci.point.stp == ci.stp[0]
+    with pytest.raises(MetricsError):
+        result.summary_ci(policy="mpmax")      # not in the sweep
