@@ -1,7 +1,8 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: check check-all test test-all smoke smoke-sweep golden
+.PHONY: check check-all test test-all smoke smoke-sweep \
+        smoke-sweep-closedloop smoke-sweep-executor golden
 
 # Fast tier (default): deselects @pytest.mark.slow (golden-trace sweep
 # regression, full Table-5 cells, 8-device distributed run).
@@ -33,9 +34,16 @@ smoke-sweep-executor:
 	$(PY) -m benchmarks.run --machine executor --jobs 2 --subset 1 \
 	    --no-cache
 
+# Closed-loop sweep smoke: completion-driven M/G/k + think-time cells
+# (arrival processes fed by the DES feedback edge) through the same
+# runner — small spec, multiprocess fan-out.
+smoke-sweep-closedloop:
+	$(PY) -m benchmarks.run closedloop --jobs 2 --subset 1 --no-cache
+
 check: test smoke
 
-check-all: test-all smoke smoke-sweep smoke-sweep-executor
+check-all: test-all smoke smoke-sweep smoke-sweep-closedloop \
+	smoke-sweep-executor
 
 # Regenerate the golden-trace fixture (ONLY when a schedule change is
 # intended and reviewed; tests/test_golden_traces.py pins the current one).

@@ -32,7 +32,7 @@ from repro.core import (
     solo_runtime_cached,
 )
 from repro.core.metrics import WorkloadMetrics
-from repro.core.scenarios import PairStagger, Scenario
+from repro.core.scenarios import ClosedLoopScenario, PairStagger, Scenario
 from repro.core.workload import reorder_for_oracle
 
 SEED = 0
@@ -81,6 +81,44 @@ class _SubsetScenario(Scenario):
         return self.inner.workloads()[: self.limit]
 
 
+class _SubsetClosedLoop(ClosedLoopScenario):
+    """First-N-processes view of a closed-loop scenario (``--subset``).
+
+    Delegates everything — including ``process_params`` — to the inner
+    scenario, so subset cells share cache entries with full-sweep cells of
+    the same workload names.
+    """
+
+    def __init__(self, inner: ClosedLoopScenario, limit: int):
+        super().__init__(inner.seed)
+        self.inner = inner
+        self.limit = limit
+        self.name = inner.name
+
+    def reseeded(self, seed: int) -> "Scenario":
+        return _SubsetClosedLoop(self.inner.reseeded(seed), self.limit)
+
+    def process_names(self):
+        return self.inner.process_names()[: self.limit]
+
+    def make_process(self, name: str):
+        return self.inner.make_process(name)
+
+    def mix_specs(self):
+        return self.inner.mix_specs()
+
+    def process_params(self) -> dict:
+        return self.inner.process_params()
+
+
+def _subset(scenario: Scenario) -> Scenario:
+    if SUBSET is None:
+        return scenario
+    if isinstance(scenario, ClosedLoopScenario):
+        return _SubsetClosedLoop(scenario, SUBSET)
+    return _SubsetScenario(scenario, SUBSET)
+
+
 def sweep(scenarios, policies, predictors=(None,), seeds=(SEED,),
           until=None, machine="des", n_sm=None,
           time_scale=None) -> SweepResult:
@@ -90,9 +128,7 @@ def sweep(scenarios, policies, predictors=(None,), seeds=(SEED,),
     executor (``n_sm`` is then the lane count); see
     :mod:`repro.core.sweep`.
     """
-    scenarios = tuple(
-        s if SUBSET is None else _SubsetScenario(s, SUBSET)
-        for s in scenarios)
+    scenarios = tuple(_subset(s) for s in scenarios)
     kwargs = {}
     if n_sm is not None:
         kwargs["n_sm"] = n_sm

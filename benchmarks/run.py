@@ -44,6 +44,7 @@ MODULES = [
     ("benchmarks.fig14_15_16_per_workload", "des"),
     ("benchmarks.table6_arrival_offsets", "des"),
     ("benchmarks.scenarios_openloop", "des"),
+    ("benchmarks.closedloop", "des"),
     ("benchmarks.executor_policies", "executor"),
     ("benchmarks.roofline", "des"),
 ]

@@ -23,17 +23,21 @@ Backend-independent core:
 * :mod:`repro.core.scheduler_service` — async multi-tenant submission API
   (``submit(job) -> handle``, late arrivals, cancellation, per-tenant
   metrics) over the lane executor.
-* :mod:`repro.core.metrics`   — STP / ANTT / StrictF, plus completion-window
-  metrics for open-loop/truncated runs.
-* :mod:`repro.core.scenarios` — registry of named, seeded arrival-process
-  generators (the paper's pair workloads, Table-6 offsets, open-loop
-  Poisson streams, bursty traffic, N-program mixes, trace replay).
+* :mod:`repro.core.metrics`   — STP / ANTT / StrictF, completion-window
+  metrics for open-loop/truncated runs, and steady-state queueing metrics
+  (mean/p95 response, number in system, throughput) for closed-loop runs.
+* :mod:`repro.core.scenarios` — two-tier registry of named, seeded
+  workload generators: open-loop arrival lists (the paper's pair
+  workloads, Table-6 offsets, Poisson/bursty/diurnal streams, N-program
+  mixes, trace replay) and closed-loop arrival *processes* fed by machine
+  completions (M/G/k bounded-population load, think-time tenant loops).
 * :mod:`repro.core.sweep`     — declarative (scenario x policy x predictor
-  x seed) sweeps with multiprocess fan-out and a content-addressed
-  on-disk result cache.
+  x seed) sweeps on either machine with multiprocess fan-out and a
+  content-addressed on-disk result cache.
 """
 
 from .events import (
+    ArrivalSource,
     BlockEnded,
     BlockStarted,
     Decision,
@@ -49,19 +53,28 @@ from .events import (
 from .machine import KernelRun, Machine, MachineBase, SchedulerCore
 from .metrics import (
     MetricsError,
+    QueueingMetrics,
     WindowMetrics,
     WorkloadMetrics,
     evaluate,
+    evaluate_queueing,
     evaluate_window,
     geomean,
     summarize,
 )
 from .scenarios import (
+    ArrivalProcess,
+    ClosedLoopScenario,
+    Diurnal,
+    MGkClosed,
     SCENARIOS,
     Scenario,
+    ThinkTime,
     executor_job,
     executor_workload,
+    fit_diurnal_profile,
     make_scenario,
+    open_loop_names,
     register_scenario,
     submission_offsets,
     workload_digest,
@@ -110,10 +123,14 @@ from .workload import (
 
 __all__ = [
     "Arrival",
+    "ArrivalProcess",
+    "ArrivalSource",
     "BlockEnded",
     "BlockStarted",
     "CellResult",
+    "ClosedLoopScenario",
     "Decision",
+    "Diurnal",
     "ERCBENCH",
     "EWMAPredictor",
     "FIFO",
@@ -125,6 +142,7 @@ __all__ = [
     "KernelSpec",
     "LJF",
     "MACHINES",
+    "MGkClosed",
     "MPMax",
     "Machine",
     "MetricsCI",
@@ -138,6 +156,7 @@ __all__ = [
     "Policy",
     "PreemptAtBoundary",
     "Predictor",
+    "QueueingMetrics",
     "SCENARIOS",
     "SJF",
     "SRTF",
@@ -151,17 +170,21 @@ __all__ = [
     "SweepResult",
     "SweepSpec",
     "TABLE3_RUNTIME",
+    "ThinkTime",
     "WindowMetrics",
     "WorkloadMetrics",
     "evaluate",
+    "evaluate_queueing",
     "evaluate_window",
     "executor_job",
     "executor_workload",
+    "fit_diurnal_profile",
     "geomean",
     "grants_issue",
     "make_policy",
     "make_predictor",
     "make_scenario",
+    "open_loop_names",
     "register_predictor",
     "register_scenario",
     "run_sweep",

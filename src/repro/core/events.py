@@ -27,12 +27,24 @@ These small frozen dataclasses are the vocabulary of the ``SchedulerCore``
 Machines only need :func:`grants_issue` to act; the richer types exist for
 telemetry, testing and future machines (e.g. real pod lanes) that want to
 treat sampling or draining specially.
+
+* **Feedback** (machine → workload): :class:`ArrivalSource` is the
+  completion→arrival feedback edge that makes closed-loop workloads
+  possible.  A machine with an attached source (see
+  :meth:`repro.core.machine.MachineBase.attach_arrival_source`) feeds it
+  every natural kernel completion *after* posting the corresponding
+  :class:`KernelEnded` event, and schedules whatever
+  :class:`~repro.core.workload.Arrival`\\ s the source emits in response —
+  the next kernels of an M/G/k offered-load stream, a tenant's think-time
+  resubmission, and so on (:mod:`repro.core.scenarios` closed-loop tier).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Union
+from typing import List, Optional, Protocol, Union, runtime_checkable
+
+from .workload import Arrival
 
 # --------------------------------------------------------------------- events
 
@@ -73,13 +85,44 @@ class BlockEnded:
 
 @dataclass(frozen=True)
 class KernelEnded:
-    """Every block of the kernel completed (Algorithm 1 ONKERNELEND)."""
+    """Every block of the kernel completed (Algorithm 1 ONKERNELEND).
+
+    This event is also the trigger of the completion→arrival feedback
+    edge: machines with an attached :class:`ArrivalSource` feed it the
+    completed key right after posting this event, so closed-loop arrival
+    processes observe completions in machine-event order.
+    """
 
     key: str
     time: float
 
 
 MachineEvent = Union[KernelArrived, BlockStarted, BlockEnded, KernelEnded]
+
+
+# ------------------------------------------------------------------ feedback
+@runtime_checkable
+class ArrivalSource(Protocol):
+    """Completion-driven arrival generator (the closed-loop feedback edge).
+
+    A source is *stateful and single-use*: one machine run consumes one
+    source.  The machine calls :meth:`initial` exactly once when the source
+    is attached and :meth:`on_completion` once per natural kernel
+    completion (cancelled kernels do not count — a cancellation is a
+    frontend action, not the machine finishing work).  Returned arrivals
+    carry times in **source time units**; machines with a different clock
+    (the real-JAX executor counts seconds, scenarios count cycles) convert
+    via the ``time_scale`` given at attach time.  Arrival times in the past
+    are clipped to "now" by the machine, never reordered into its history.
+    """
+
+    def initial(self) -> List[Arrival]:
+        """Arrivals to schedule before the machine starts running."""
+        ...
+
+    def on_completion(self, key: str, now: float) -> List[Arrival]:
+        """Arrivals emitted in response to ``key`` completing at ``now``."""
+        ...
 
 
 # ------------------------------------------------------------------ decisions
@@ -132,6 +175,7 @@ def grants_issue(decision: Decision) -> Optional[str]:
 
 
 __all__ = [
+    "ArrivalSource",
     "BlockEnded",
     "BlockStarted",
     "Decision",

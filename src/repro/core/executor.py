@@ -31,13 +31,13 @@ from __future__ import annotations
 import heapq
 import itertools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .events import BlockEnded, BlockStarted, KernelArrived, KernelEnded, grants_issue
 from .machine import KernelRun, MachineBase
 from .predictor import Predictor
-from .workload import KernelSpec
+from .workload import Arrival, KernelSpec
 
 
 @dataclass
@@ -99,6 +99,9 @@ class ExecutorWindow:
     end_time: float
     makespan: float
     utilization: float
+    #: Arrival time of every job, finished or not (queueing metrics need
+    #: the in-flight ones to integrate number-in-system over the window).
+    arrival: Dict[str, float] = field(default_factory=dict)
 
 
 @dataclass
@@ -129,9 +132,16 @@ class LaneExecutor(MachineBase):
                  fail_lane_at: Optional[Tuple[int, float]] = None,
                  straggler: Optional[Tuple[int, float]] = None,
                  straggler_quarantine: float = 2.5,
-                 predictor: Union[str, Predictor, None] = None):
+                 predictor: Union[str, Predictor, None] = None,
+                 job_bridge: Optional[Callable[[Arrival], ExecutorJob]] = None):
         super().__init__(n_lanes, policy, predictor=predictor)
         self.n_lanes = n_lanes
+        #: Maps a scenario :class:`~repro.core.workload.Arrival` to a
+        #: schedulable job — required for :meth:`inject_arrival` (the
+        #: closed-loop feedback path; the sweep runner passes the real-JAX
+        #: bridge from :mod:`repro.core.scenarios`, which also scales the
+        #: arrival time from scenario cycles to lane seconds).
+        self.job_bridge = job_bridge
         self.sms = [_LaneState(i) for i in range(n_lanes)]
         self.jobs: Dict[str, ExecutorJob] = {}
         self._block_fns: Dict[Tuple[str, int], Callable] = {}
@@ -184,6 +194,17 @@ class LaneExecutor(MachineBase):
         heapq.heappush(self._events,
                        (arrival, 0, next(self._seq), ("arrival", key)))
         return key
+
+    def inject_arrival(self, arrival: Arrival) -> str:
+        """Closed-loop feedback: bridge one scenario arrival to a job via
+        :attr:`job_bridge` and register it with :meth:`add_job` (which
+        clips the arrival to "now" and keeps the scenario uid as the key).
+        """
+        if self.job_bridge is None:
+            raise ValueError(
+                "LaneExecutor needs a job_bridge to inject scenario "
+                "arrivals (pass job_bridge= at construction)")
+        return self.add_job(self.job_bridge(arrival), key=arrival.key)
 
     def cancel(self, key: str) -> bool:
         """Cancel a job at the next block boundary.
@@ -272,10 +293,12 @@ class LaneExecutor(MachineBase):
         turnaround: Dict[str, float] = {}
         finish: Dict[str, float] = {}
         names: Dict[str, str] = {}
+        arrival: Dict[str, float] = {}
         unfinished: List[str] = []
         end_time = self.now
         for key, run in sorted(self.runs.items(), key=lambda kv: kv[1].order):
             names[key] = run.spec.name
+            arrival[key] = run.arrival_time
             if run.finish_time is None or run.cancelled:
                 unfinished.append(key)
                 continue
@@ -289,7 +312,7 @@ class LaneExecutor(MachineBase):
         return ExecutorWindow(
             turnaround=turnaround, finish=finish, names=names,
             unfinished=tuple(unfinished), end_time=end_time,
-            makespan=makespan, utilization=util)
+            makespan=makespan, utilization=util, arrival=arrival)
 
     def _on_arrival(self, key: str) -> None:
         if self.runs[key].finished:
@@ -324,6 +347,10 @@ class LaneExecutor(MachineBase):
                 key, run.arrival_time, self.now, run.done,
                 self.failures_absorbed)
             self.core.post(KernelEnded(key, self.now))
+            # Natural completion only: cancel() posts KernelEnded too, but
+            # a frontend cancellation is not the machine finishing work and
+            # must not trigger closed-loop resubmission.
+            self._feed_completion(key)
 
     def _on_fail_lane(self, lane_idx: int) -> None:
         lane = self.sms[lane_idx]

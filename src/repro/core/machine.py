@@ -19,7 +19,12 @@ executor):
   stop re-implementing ``active_keys`` / ``can_fit`` / residency-cap
   propagation independently.  Concrete machines supply two hooks:
   ``_cap_residency`` (which occupancy count the residency cap constrains)
-  and ``_fits_resources`` (whether one more block physically fits).
+  and ``_fits_resources`` (whether one more block physically fits).  It
+  also owns the closed-loop feedback edge: ``attach_arrival_source`` binds
+  an :class:`~repro.core.events.ArrivalSource`, ``_feed_completion``
+  reports each natural kernel completion to it, and machines that support
+  dynamic arrivals implement ``inject_arrival`` to schedule what the
+  source emits (DESIGN.md Section 7).
 
 * :class:`SchedulerCore` — the scheduling brain: one
   :class:`~repro.core.policies.Policy` plus one
@@ -42,6 +47,7 @@ from typing import Dict, List, Optional, Protocol, Union, runtime_checkable
 import numpy as np
 
 from .events import (
+    ArrivalSource,
     BlockEnded,
     BlockStarted,
     Decision,
@@ -50,7 +56,7 @@ from .events import (
     MachineEvent,
 )
 from .predictor import Predictor, make_predictor
-from .workload import KernelSpec
+from .workload import Arrival, KernelSpec
 
 
 @dataclass
@@ -215,6 +221,11 @@ class MachineBase:
         self.oracle_runtimes: Dict[str, float] = dict(oracle_runtimes or {})
         self.core = SchedulerCore(policy, predictor, n_sm)
         self._key_order: Optional[List[str]] = None  # active_keys() cache
+        #: Closed-loop feedback edge (None = open loop, the default).
+        self._arrival_source: Optional[ArrivalSource] = None
+        #: Machine seconds per source time unit (1.0 on the cycle-clocked
+        #: DES; the executor attaches with its scenario time_scale).
+        self._source_time_scale = 1.0
         # Plain attributes, not properties: policies and predictors read
         # machine.predictor in their innermost loops, and the core never
         # swaps its policy/predictor after construction.
@@ -282,7 +293,48 @@ class MachineBase:
                           self.core.residency_cap(key, sm))
                 self.predictor.on_residency_change(key, sm, cap)
 
+    # -- closed-loop feedback edge ------------------------------------------
+    def attach_arrival_source(self, source: ArrivalSource,
+                              time_scale: float = 1.0) -> None:
+        """Close the loop: feed ``source`` every natural kernel completion
+        and schedule the arrivals it emits (DESIGN.md Section 7).
+
+        ``time_scale`` is machine seconds per source time unit: completion
+        times are reported to the source as ``now / time_scale`` and the
+        machine's :meth:`inject_arrival` is responsible for scaling emitted
+        arrival times back.  The source's :meth:`~repro.core.events
+        .ArrivalSource.initial` arrivals are injected immediately; a source
+        is single-use, so attaching twice is an error.
+        """
+        if self._arrival_source is not None:
+            raise ValueError("an arrival source is already attached")
+        if time_scale <= 0.0:
+            raise ValueError("time_scale must be positive")
+        self._arrival_source = source
+        self._source_time_scale = time_scale
+        for arrival in source.initial():
+            self.inject_arrival(arrival)
+
+    def _feed_completion(self, key: str) -> None:
+        """Report one natural completion to the attached source (if any)
+        and inject whatever arrivals it emits.  Machines call this right
+        after posting :class:`~repro.core.events.KernelEnded`."""
+        source = self._arrival_source
+        if source is None:
+            return
+        now = self.now / self._source_time_scale
+        for arrival in source.on_completion(key, now):
+            self.inject_arrival(arrival)
+
     # -- machine-specific hooks ---------------------------------------------
+    def inject_arrival(self, arrival: Arrival) -> str:
+        """Schedule one dynamic arrival (closed-loop feedback); returns the
+        kernel key.  Arrival times are in source units (machine-specific
+        scaling applies) and are clipped to "now" — a feedback arrival can
+        never land in the machine's past."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support dynamic arrivals")
+
     def _cap_residency(self, key: str, sm: int) -> int:
         """Occupancy count the residency cap constrains on ``sm``."""
         raise NotImplementedError

@@ -20,7 +20,18 @@ Python's ``hash()`` is salted), exactly like the simulator's per-kernel
 noise streams.  That determinism is what makes sweep results
 content-addressable (:mod:`repro.core.sweep`).
 
-Built-in scenarios:
+The contract is **two-tier** (DESIGN.md Section 7):
+
+* **Open loop** (:class:`Scenario`): ``workloads()`` yields fixed, fully
+  materialized arrival lists — arrivals do not react to machine state.
+* **Closed loop** (:class:`ClosedLoopScenario`): ``make_process(name)``
+  yields an **arrival process** — a seeded, stateful generator that is fed
+  kernel completions by the machine (the
+  :class:`~repro.core.events.ArrivalSource` feedback edge) and emits the
+  next arrivals: offered load that reacts to how fast the scheduler
+  drains it, the regime where preemptive SRTF is actually stress-tested.
+
+Built-in open-loop scenarios:
 
 * ``pair-stagger``  — the paper's 56 two-program ERCBench workloads
   (Section 6.1.3); byte-identical to
@@ -34,6 +45,19 @@ Built-in scenarios:
 * ``nprogram-mix``  — random closed N-program workloads (N > 2).
 * ``trace-replay``  — arrivals replayed from a JSON trace (file or
   in-memory), for production traces and hermetic tests.
+* ``diurnal``       — piecewise-rate (day/night) Poisson stream; the rate
+  profile is calibratable from a ``trace-replay`` JSON
+  (:func:`fit_diurnal_profile` / :meth:`Diurnal.from_trace`).
+
+Built-in closed-loop scenarios:
+
+* ``mgk-closed``    — M/G/k-style offered Poisson load with a bounded
+  population: at most ``population`` kernels in the system; excess offered
+  arrivals are deferred until a completion frees a slot (``admission=
+  "defer"``) or rejected outright (``admission="drop"``).
+* ``think-time``    — ``n_tenants`` independent tenants, each resubmitting
+  a fresh kernel ``think ~ Exp(mean_think)`` after its previous one
+  finishes (the interactive-user loop).
 """
 
 from __future__ import annotations
@@ -393,6 +417,441 @@ class TraceReplay(Scenario):
         return [(self.workload_name, self._arrivals(data))]
 
 
+# ----------------------------------------------------------------- diurnal
+#: Named day/night rate profile: relative arrival rate per segment of the
+#: repeating day (trough -> ramp -> sustained peak -> evening falloff).
+DAY_NIGHT_PROFILE: Tuple[float, ...] = (
+    0.15, 0.3, 0.7, 1.0, 1.0, 0.8, 0.5, 0.25)
+
+
+def fit_diurnal_profile(times: Sequence[float], n_segments: int,
+                        period: float) -> Tuple[Tuple[float, ...], float]:
+    """Fit a :class:`Diurnal` ``(profile, peak_interarrival)`` from
+    observed arrival times (e.g. a production ``trace-replay`` JSON).
+
+    Arrival times are binned by ``time mod period`` into ``n_segments``
+    equal segments over an observation span rounded up to whole periods;
+    per-segment rates are normalized so the peak segment has relative rate
+    1.0, and ``peak_interarrival`` is the peak segment's mean interarrival
+    gap.  Raises :class:`ValueError` on degenerate input (no arrivals,
+    non-positive period, fewer than one segment).
+    """
+    times = sorted(float(t) for t in times)
+    if not times:
+        raise ValueError("cannot fit a diurnal profile to zero arrivals")
+    if times[0] < 0.0:
+        raise ValueError("negative arrival time in trace")
+    if period <= 0.0 or n_segments < 1:
+        raise ValueError("need period > 0 and n_segments >= 1")
+    # Observation span rounded up to whole periods; the epsilon keeps a
+    # span that is an exact multiple of the period (e.g. from_trace's
+    # default period == max(times)) from counting a phantom extra period,
+    # which would halve every fitted rate.
+    n_periods = max(1, math.ceil(times[-1] / period - 1e-9))
+    segment = period / n_segments
+    counts = [0] * n_segments
+    for t in times:
+        rem = t % period
+        if rem == 0.0 and t > 0.0:
+            # An arrival at an exact period multiple closes the previous
+            # period (from_trace's default period == max(times) puts the
+            # last arrival here); binning it into segment 0 would inflate
+            # the first segment's rate.
+            counts[n_segments - 1] += 1
+        else:
+            counts[min(n_segments - 1, int(rem / segment))] += 1
+    observed_per_segment = n_periods * segment
+    rates = [c / observed_per_segment for c in counts]
+    peak = max(rates)
+    # times is non-empty, so at least one bin counted and peak > 0
+    return tuple(r / peak for r in rates), 1.0 / peak
+
+
+@register_scenario("diurnal")
+class Diurnal(Scenario):
+    """Piecewise-rate (non-homogeneous) Poisson stream: the day/night load
+    shape real clusters see.
+
+    The rate over a repeating day of ``len(profile)`` segments of
+    ``segment`` cycles each is ``profile[j] / peak_interarrival`` —
+    ``profile`` holds *relative* rates (peak 1.0), ``peak_interarrival``
+    the mean gap at peak.  Arrivals are drawn by cumulative-hazard
+    inversion (unit-rate exponentials mapped through the piecewise-linear
+    integrated rate), so zero-rate segments are skipped exactly.  Use
+    :meth:`from_trace` / :func:`fit_diurnal_profile` to calibrate the
+    profile from a ``trace-replay`` JSON.
+    """
+
+    def __init__(self, seed: int = 0,
+                 names: Sequence[str] = OPEN_LOOP_MIX,
+                 specs: Optional[Dict[str, KernelSpec]] = None,
+                 n_arrivals: int = 12,
+                 peak_interarrival: float = 40_000.0,
+                 profile: Sequence[float] = DAY_NIGHT_PROFILE,
+                 segment: float = 150_000.0,
+                 n_workloads: int = 2):
+        self._mix = _MixScenario(seed, names, specs)
+        super().__init__(seed)
+        self.profile = tuple(float(r) for r in profile)
+        if not self.profile or min(self.profile) < 0.0 \
+                or max(self.profile) <= 0.0:
+            raise ValueError(
+                "profile needs >= 1 non-negative relative rates, peak > 0")
+        if peak_interarrival <= 0.0 or segment <= 0.0:
+            raise ValueError("peak_interarrival and segment must be > 0")
+        self.n_arrivals = n_arrivals
+        self.peak_interarrival = peak_interarrival
+        self.segment = segment
+        self.n_workloads = n_workloads
+
+    @classmethod
+    def from_trace(cls, path: Optional[Union[str, Path]] = None,
+                   trace: Optional[Union[list, dict]] = None,
+                   n_segments: int = 8, period: Optional[float] = None,
+                   **kwargs) -> "Diurnal":
+        """Calibrate ``profile``/``peak_interarrival``/``segment`` from a
+        ``trace-replay``-shaped JSON (first workload's arrival times).
+        ``period`` defaults to the trace's observed span."""
+        replay = TraceReplay(path=path, trace=trace,
+                             specs=kwargs.get("specs"))
+        workloads = replay.workloads()
+        if not workloads or not workloads[0][1]:
+            raise ValueError("trace holds no arrivals to calibrate from")
+        times = [a.time for a in workloads[0][1]]
+        if period is None:
+            period = max(times) if max(times) > 0.0 else 1.0
+        profile, peak = fit_diurnal_profile(times, n_segments, period)
+        return cls(profile=profile, peak_interarrival=peak,
+                   segment=period / n_segments, **kwargs)
+
+    def _hazard_per_segment(self) -> List[float]:
+        """Integrated rate (expected arrivals) of each segment."""
+        return [r * self.segment / self.peak_interarrival
+                for r in self.profile]
+
+    def _invert(self, cum_hazard: float) -> float:
+        """Arrival time whose integrated rate equals ``cum_hazard``."""
+        seg_hazard = self._hazard_per_segment()
+        per_period = sum(seg_hazard)
+        period = self.segment * len(self.profile)
+        k, rem = divmod(cum_hazard, per_period)
+        t = k * period
+        for j, h in enumerate(seg_hazard):
+            if rem < h:  # lands inside segment j (rate > 0 since h > rem >= 0)
+                return t + j * self.segment \
+                    + rem * self.peak_interarrival / self.profile[j]
+            rem -= h
+        # rem == per_period boundary rounding: start of the next period
+        return t + period
+
+    def workloads(self) -> List[Workload]:
+        out: List[Workload] = []
+        for w in range(self.n_workloads):
+            rng = self.rng(w)
+            hazard = 0.0
+            draws: List[Tuple[KernelSpec, float]] = []
+            for _ in range(self.n_arrivals):
+                draws.append((self._mix._pick(rng), self._invert(hazard)))
+                hazard += float(rng.exponential(1.0))
+            out.append((f"diurnal{w}", self._mix._build(draws)))
+        return out
+
+
+# ------------------------------------------------------- closed-loop tier
+class ArrivalProcess:
+    """Base class for completion-driven arrival generators.
+
+    Implements the :class:`repro.core.events.ArrivalSource` machine
+    contract: :meth:`initial` is called once at attach time,
+    :meth:`on_completion` once per natural kernel completion.  A process
+    is **stateful and single-use** — one machine run consumes one process;
+    build a fresh one per run via
+    :meth:`ClosedLoopScenario.make_process`.  Times are in scenario cycles
+    (machines with other clocks convert — see
+    :meth:`repro.core.machine.MachineBase.attach_arrival_source`).
+    """
+
+    def initial(self) -> List[Arrival]:
+        raise NotImplementedError
+
+    def on_completion(self, key: str, now: float) -> List[Arrival]:
+        raise NotImplementedError
+
+
+class ClosedLoopScenario(Scenario):
+    """Tier-2 scenario contract: named, seeded arrival *processes*.
+
+    Closed-loop scenarios cannot materialize ``workloads()`` — the arrival
+    sequence depends on the machine's completions, which depend on the
+    policy under test (that coupling is the point).  Instead they expose:
+
+    * :meth:`process_names` — the workload names of the sweep grid,
+    * :meth:`make_process`  — a fresh single-use :class:`ArrivalProcess`
+      per (workload, run), seeded from (scenario seed, workload index),
+    * :meth:`mix_specs`     — every kernel spec the process may emit
+      (the sweep runner measures solo oracles from it up front),
+    * :meth:`process_params` — the canonical parameter payload the sweep
+      cache digests in place of a materialized arrival list.
+    """
+
+    def workloads(self) -> List[Workload]:
+        raise TypeError(
+            f"{self.name!r} is a closed-loop scenario: arrivals are "
+            "completion-driven and cannot be materialized up front; use "
+            "process_names()/make_process() (or run it through "
+            "repro.core.sweep.run_sweep)")
+
+    def process_names(self) -> List[str]:
+        raise NotImplementedError
+
+    def make_process(self, name: str) -> ArrivalProcess:
+        raise NotImplementedError
+
+    def mix_specs(self) -> Dict[str, KernelSpec]:
+        raise NotImplementedError
+
+    def process_params(self) -> dict:
+        """Canonical cache-key payload: class + every draw-determining
+        parameter + the full content of every spec the process may emit.
+        The sweep seed is *not* included — the cell key carries it."""
+        import dataclasses
+        return {
+            "scenario": self.name,
+            "class": type(self).__name__,
+            "params": self._params(),
+            "specs": {n: dataclasses.asdict(s)
+                      for n, s in sorted(self.mix_specs().items())},
+        }
+
+    def _params(self) -> dict:
+        """Draw-determining parameters (primitives only); subclass hook
+        for :meth:`process_params`."""
+        raise NotImplementedError
+
+    def _process_rng(self, name: str) -> np.random.Generator:
+        """Per-(scenario, seed, workload) RNG stream for a fresh process."""
+        names = self.process_names()
+        try:
+            index = names.index(name)
+        except ValueError:
+            raise ValueError(
+                f"unknown workload {name!r}; choose from {names}") from None
+        return self.rng(index)
+
+
+class _MGkProcess(ArrivalProcess):
+    """Bounded-population window over a pre-drawn offered Poisson stream.
+
+    The offered stream (arrival gaps + kernel picks) is drawn up front, so
+    the *demand* is identical across policies — only admission timing
+    reacts to completions.  At most ``population`` released-but-unfinished
+    kernels exist at any time; on each completion the next offered arrival
+    is released at ``max(offered time, now)`` (``admission="defer"``) or
+    offered arrivals whose time passed while the system was full are
+    rejected and counted in :attr:`dropped` (``admission="drop"``).
+    """
+
+    def __init__(self, offered: List[Tuple[KernelSpec, float]],
+                 population: int, admission: str):
+        self._offered = offered
+        self._population = population
+        self._admission = admission
+        self._next = 0
+        self._in_system = 0
+        self._live: set = set()   # uids this process emitted, unfinished
+        #: Offered arrivals rejected by the admission cap (drop mode).
+        self.dropped = 0
+
+    def _release(self, at: Optional[float] = None) -> Arrival:
+        spec, time = self._offered[self._next]
+        uid = f"{spec.name}#{self._next}"
+        self._next += 1
+        self._in_system += 1
+        self._live.add(uid)
+        return Arrival(spec, time if at is None else max(time, at), uid=uid)
+
+    def initial(self) -> List[Arrival]:
+        out = []
+        while self._next < len(self._offered) \
+                and self._in_system < self._population:
+            out.append(self._release())
+        return out
+
+    def on_completion(self, key: str, now: float) -> List[Arrival]:
+        if key not in self._live:
+            # The machine reports every natural completion; static
+            # arrivals it was constructed with are not ours and must not
+            # corrupt the population accounting.
+            return []
+        self._live.discard(key)
+        self._in_system -= 1
+        if self._admission == "drop":
+            # Loss system: offered arrivals whose time passed while the
+            # system was full found it full — reject them.
+            while self._next < len(self._offered) \
+                    and self._offered[self._next][1] < now:
+                self._next += 1
+                self.dropped += 1
+        out = []
+        while self._next < len(self._offered) \
+                and self._in_system < self._population:
+            out.append(self._release(at=now))
+        return out
+
+
+@register_scenario("mgk-closed")
+class MGkClosed(ClosedLoopScenario):
+    """M/G/k-style offered load with a bounded population (closed loop).
+
+    ``n_total`` offered arrivals per workload with mean gap
+    ``mean_interarrival`` (the offered load), drawn from the kernel mix; at
+    most ``population`` kernels in the system.  ``admission="defer"``
+    queues excess offered arrivals until a completion frees a slot —
+    sustained backpressure; ``admission="drop"`` is the admission-capped
+    variant: arrivals that find the system full are rejected (the process
+    counts them in ``dropped``).  Each of ``n_workloads`` workloads is an
+    independent draw of the same offered process.
+    """
+
+    def __init__(self, seed: int = 0,
+                 names: Sequence[str] = OPEN_LOOP_MIX,
+                 specs: Optional[Dict[str, KernelSpec]] = None,
+                 n_total: int = 12,
+                 mean_interarrival: float = 50_000.0,
+                 population: int = 4,
+                 admission: str = "defer",
+                 n_workloads: int = 1,
+                 tag: str = ""):
+        self._mix = _MixScenario(seed, names, specs)
+        super().__init__(seed)
+        if population < 1:
+            raise ValueError("mgk-closed needs population >= 1")
+        if admission not in ("defer", "drop"):
+            raise ValueError(
+                f"unknown admission {admission!r}; choose defer or drop")
+        self.n_total = n_total
+        self.mean_interarrival = mean_interarrival
+        self.population = population
+        self.admission = admission
+        self.n_workloads = n_workloads
+        #: Optional label folded into workload names (e.g. one tag per
+        #: offered-load point, so load-sweep cells stay distinguishable).
+        self.tag = tag
+
+    def _params(self) -> dict:
+        return {
+            "names": list(self._mix.names), "n_total": self.n_total,
+            "mean_interarrival": self.mean_interarrival,
+            "population": self.population, "admission": self.admission,
+            "n_workloads": self.n_workloads, "tag": self.tag,
+        }
+
+    def process_names(self) -> List[str]:
+        prefix = f"mgk{self.tag}" if self.tag else "mgk"
+        return [f"{prefix}.{w}" for w in range(self.n_workloads)]
+
+    def mix_specs(self) -> Dict[str, KernelSpec]:
+        return {n: self._mix.specs[n] for n in self._mix.names}
+
+    def make_process(self, name: str) -> _MGkProcess:
+        rng = self._process_rng(name)
+        t = 0.0
+        offered: List[Tuple[KernelSpec, float]] = []
+        for _ in range(self.n_total):
+            offered.append((self._mix._pick(rng), t))
+            t += float(rng.exponential(self.mean_interarrival))
+        return _MGkProcess(offered, self.population, self.admission)
+
+
+class _ThinkTimeProcess(ArrivalProcess):
+    """N tenants, each looping submit -> await completion -> think."""
+
+    def __init__(self, rng: np.random.Generator, picks, mean_think: float,
+                 n_tenants: int, n_rounds: int):
+        self._rng = rng
+        self._pick = picks
+        self._mean_think = mean_think
+        self._n_tenants = n_tenants
+        self._n_rounds = n_rounds
+        self._tenant_of: Dict[str, int] = {}
+        self._rounds_done = [0] * n_tenants
+        self._seq = 0
+
+    def _submit(self, tenant: int, at: float) -> Arrival:
+        spec = self._pick(self._rng)
+        uid = f"{spec.name}#{self._seq}"
+        self._seq += 1
+        self._tenant_of[uid] = tenant
+        self._rounds_done[tenant] += 1
+        return Arrival(spec, at, uid=uid)
+
+    def initial(self) -> List[Arrival]:
+        # Each tenant thinks once before its first submission, so tenants
+        # de-synchronize exactly like they do between rounds.
+        return [
+            self._submit(i, float(self._rng.exponential(self._mean_think)))
+            for i in range(self._n_tenants)
+        ]
+
+    def on_completion(self, key: str, now: float) -> List[Arrival]:
+        tenant = self._tenant_of.pop(key, None)
+        if tenant is None or self._rounds_done[tenant] >= self._n_rounds:
+            return []
+        think = float(self._rng.exponential(self._mean_think))
+        return [self._submit(tenant, now + think)]
+
+
+@register_scenario("think-time")
+class ThinkTime(ClosedLoopScenario):
+    """Interactive-tenant loop (closed loop): each of ``n_tenants``
+    tenants resubmits a fresh kernel from the mix ``think ~
+    Exp(mean_think)`` cycles after its previous kernel finishes, for
+    ``n_rounds`` rounds.  Offered load tracks service capacity by
+    construction — the canonical closed queueing loop."""
+
+    def __init__(self, seed: int = 0,
+                 names: Sequence[str] = OPEN_LOOP_MIX,
+                 specs: Optional[Dict[str, KernelSpec]] = None,
+                 n_tenants: int = 3,
+                 mean_think: float = 20_000.0,
+                 n_rounds: int = 4,
+                 n_workloads: int = 1):
+        self._mix = _MixScenario(seed, names, specs)
+        super().__init__(seed)
+        if n_tenants < 1 or n_rounds < 1:
+            raise ValueError("think-time needs n_tenants, n_rounds >= 1")
+        self.n_tenants = n_tenants
+        self.mean_think = mean_think
+        self.n_rounds = n_rounds
+        self.n_workloads = n_workloads
+
+    def _params(self) -> dict:
+        return {
+            "names": list(self._mix.names), "n_tenants": self.n_tenants,
+            "mean_think": self.mean_think, "n_rounds": self.n_rounds,
+            "n_workloads": self.n_workloads,
+        }
+
+    def process_names(self) -> List[str]:
+        return [f"think.{w}" for w in range(self.n_workloads)]
+
+    def mix_specs(self) -> Dict[str, KernelSpec]:
+        return {n: self._mix.specs[n] for n in self._mix.names}
+
+    def make_process(self, name: str) -> _ThinkTimeProcess:
+        return _ThinkTimeProcess(
+            self._process_rng(name), self._mix._pick,
+            self.mean_think, self.n_tenants, self.n_rounds)
+
+
+def open_loop_names() -> Tuple[str, ...]:
+    """Registered scenario names whose ``workloads()`` materializes (the
+    CLI frontends that pace fixed submission streams filter on this)."""
+    return tuple(sorted(
+        name for name, cls in SCENARIOS.items()
+        if not issubclass(cls, ClosedLoopScenario)))
+
+
 # ------------------------------------------------------- executor bridge
 #: Seconds of executor (lane) time per scenario cycle.  Chosen so that the
 #: cycle-scale arrival gaps the scenarios emit (hundreds to a few thousand
@@ -528,17 +987,25 @@ def submission_offsets(scenario: Union[str, Scenario], n: int,
 
 
 __all__ = [
+    "ArrivalProcess",
     "Bursty",
+    "ClosedLoopScenario",
+    "DAY_NIGHT_PROFILE",
     "DEFAULT_EXECUTOR_TIME_SCALE",
+    "Diurnal",
+    "MGkClosed",
     "NProgramMix",
     "OPEN_LOOP_MIX",
     "executor_job",
     "executor_workload",
+    "fit_diurnal_profile",
+    "open_loop_names",
     "PairStagger",
     "PoissonOpen",
     "SCENARIOS",
     "Scenario",
     "Table6Offset",
+    "ThinkTime",
     "TraceReplay",
     "Workload",
     "make_scenario",

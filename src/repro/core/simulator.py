@@ -156,6 +156,9 @@ class Simulator(MachineBase):
             self._init_kernel_rng(run)
             self.runs[arr.key] = run
             self._push(arr.time, _ARRIVAL, (arr.key,))
+        # Dynamic (closed-loop) arrivals continue the same order sequence,
+        # so injected kernels draw fresh per-order noise streams.
+        self._arrival_order = itertools.count(len(self.runs))
 
         self.core.bind(self)
 
@@ -181,6 +184,24 @@ class Simulator(MachineBase):
     # --------------------------------------------------------------- events
     def _push(self, time: float, kind: int, data: tuple) -> None:
         heapq.heappush(self._events, (time, kind, next(self._seq), data))
+
+    def inject_arrival(self, arrival: Arrival) -> str:
+        """Schedule one dynamic arrival (the closed-loop feedback edge).
+
+        The kernel arrives at ``max(now, arrival.time)`` — feedback can
+        never rewrite the machine's past — and gets the next global arrival
+        order, so its noise stream is as process-stable as the up-front
+        ones (seed + crc32(name) + order).
+        """
+        key = arrival.key
+        if key in self.runs:
+            raise ValueError(f"duplicate kernel key {key!r}")
+        time = max(self.now, arrival.time)
+        run = KernelRun(key, arrival.spec, time, next(self._arrival_order))
+        self._init_kernel_rng(run)
+        self.runs[key] = run
+        self._push(time, _ARRIVAL, (key,))
+        return key
 
     def run(self, until: Optional[float] = None) -> "SimResult":
         while self._events:
@@ -225,6 +246,7 @@ class Simulator(MachineBase):
         if run.done == run.spec.num_blocks:
             run.finish_time = self.now
             self.core.post(KernelEnded(key, self.now))
+            self._feed_completion(key)
             for other_sm in self.sms:
                 self._try_issue(other_sm)
         else:
@@ -325,12 +347,15 @@ class SimResult:
         self.end_time: float = sim.now
         for key, run in sorted(sim.runs.items(), key=lambda kv: kv[1].order):
             self.name[key] = run.spec.name
+            # Arrivals cover every run, finished or not: the queueing
+            # metrics integrate number-in-system over the window, which
+            # needs the arrival times of kernels still in flight.
+            self.arrival[key] = run.arrival_time
             if run.finish_time is None:
                 self.unfinished.append(key)
                 continue
             self.turnaround[key] = run.finish_time - run.arrival_time
             self.finish[key] = run.finish_time
-            self.arrival[key] = run.arrival_time
 
     @property
     def complete(self) -> bool:
@@ -368,11 +393,18 @@ def simulate(
     oracle_runtimes: Optional[Dict[str, float]] = None,
     predictor: Union[str, Predictor, None] = None,
     until: Optional[float] = None,
+    arrival_source=None,
 ) -> SimResult:
+    """Run one simulation.  ``arrival_source`` attaches a closed-loop
+    :class:`~repro.core.events.ArrivalSource` (completion-driven arrivals;
+    typically with ``arrivals=[]`` so the source supplies the initial
+    ones)."""
     sim = Simulator(
         arrivals, policy_factory(), n_sm=n_sm, seed=seed,
         record_trace=record_trace, record_predictions=record_predictions,
         oracle_runtimes=oracle_runtimes, predictor=predictor)
+    if arrival_source is not None:
+        sim.attach_arrival_source(arrival_source)
     return sim.run(until=until)
 
 

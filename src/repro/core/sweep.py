@@ -10,6 +10,16 @@ executes it:
   arrival order, Section 2), and every cell gets the measured solo
   runtimes as its oracle, exactly like the hand-rolled benchmark loops
   this module replaces;
+* **tiers**: open-loop scenarios materialize fixed arrival lists; a
+  :class:`~repro.core.scenarios.ClosedLoopScenario` instead names seeded
+  arrival *processes* — each cell builds a fresh process and the machine
+  feeds it completions (the :class:`~repro.core.events.ArrivalSource`
+  edge), so the arrival sequence reacts to the policy under test.
+  Closed-loop cell cache keys digest the **process parameters + seed**
+  (there is no arrival list to digest), their solo oracles cover the
+  declared kernel mix, their DES code fingerprint widens to include
+  ``scenarios.py`` (the process code is result-determining), and SJF/LJF
+  — which need a materialized list to reorder — are rejected explicitly;
 * **machines**: ``machine="des"`` (default) simulates cells on the
   discrete-event simulator; ``machine="executor"`` drives the same
   workloads through the real-JAX :class:`~repro.core.executor.LaneExecutor`
@@ -18,10 +28,12 @@ executes it:
   durations are wall-clock measurements;
 * **fan-out**: with ``jobs > 1`` cells run in a process pool (fork for the
   pure-Python DES; spawn for executor cells, because forking a process
-  with an initialized JAX runtime can deadlock).  Caveat: concurrent
-  executor cells on one device contend for CPU while their solo baselines
-  were measured serially, biasing measured slowdowns pessimistic — use
-  ``jobs=1`` when measurement fidelity matters more than wall time;
+  with an initialized JAX runtime can deadlock).  Executor solo baselines
+  are measured under the *same* pool-contention conditions as the cells:
+  with ``jobs > 1`` they go through an identical spawn pool of the same
+  width (serial parent-process baselines would be systematically faster
+  than co-run cells on a small container, inflating every slowdown), and
+  the pool width is part of the solo cache key;
 * **cache**: with ``cache_dir`` every cell and solo-runtime measurement is
   stored content-addressed, keyed by a SHA-256 over the *workload content*
   (every :class:`~repro.core.workload.KernelSpec` field, arrival times,
@@ -70,14 +82,17 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 from .executor import solo_runtime_executor
 from .metrics import (
     MetricsError,
+    QueueingMetrics,
     WindowMetrics,
     WorkloadMetrics,
+    evaluate_queueing,
     evaluate_window,
     geomean,
 )
 from .policies import make_policy
 from .predictor import DEFAULT_PREDICTOR
 from .scenarios import (
+    ClosedLoopScenario,
     DEFAULT_EXECUTOR_TIME_SCALE,
     Scenario,
     executor_job,
@@ -156,6 +171,9 @@ class CellResult:
     finish: Dict[str, float]
     unfinished: Tuple[str, ...]
     names: Dict[str, str]          # kernel key -> spec name
+    #: Arrival time of every kernel, finished or in flight (queueing
+    #: metrics integrate number-in-system over the window).
+    arrival: Dict[str, float] = dataclasses.field(default_factory=dict)
     #: True for executor cells: the numbers are wall-clock measurements of
     #: real JAX executions, not deterministic simulation outputs.
     measured: bool = False
@@ -165,6 +183,15 @@ class CellResult:
         """Closed-workload STP/ANTT/fairness (``None`` if nothing
         finished inside the window)."""
         return self.window.workload_metrics
+
+    def queueing(self, warmup_frac: float = 0.2) -> QueueingMetrics:
+        """Steady-state queueing metrics of this cell
+        (:func:`repro.core.metrics.evaluate_queueing`; raises
+        :class:`~repro.core.metrics.MetricsError` when nothing completed
+        after the warmup trim)."""
+        return evaluate_queueing(self.arrival, self.finish,
+                                 end_time=self.window.end_time,
+                                 warmup_frac=warmup_frac)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -189,6 +216,7 @@ class CellResult:
             finish=dict(record["finish"]),
             unfinished=tuple(record["unfinished"]),
             names=dict(record["names"]),
+            arrival=dict(record.get("arrival", {})),
             measured=bool(record.get("measured", False)), **labels)
 
 
@@ -303,6 +331,11 @@ def _canonical_digest(payload: dict) -> str:
 _FINGERPRINT_SOURCES: Dict[str, Tuple[str, ...]] = {
     "des": ("simulator", "machine", "events", "policies", "predictor",
             "workload"),
+    # Closed-loop DES cells additionally depend on scenarios.py: the
+    # arrival *process* code (not a materialized list) determines what the
+    # cell simulates, so an edit to it must invalidate those cells.
+    "des-closed": ("simulator", "machine", "events", "policies",
+                   "predictor", "workload", "scenarios"),
     "executor": ("executor", "machine", "events", "policies", "predictor",
                  "workload", "scenarios"),
 }
@@ -343,16 +376,34 @@ def _cache_write(cache_dir: Optional[Path], key: str, record: dict) -> None:
     os.replace(tmp, path)  # atomic under concurrent writers
 
 
+def _des_solo_key(spec: KernelSpec, seed: int, n_sm: int) -> str:
+    return _canonical_digest({
+        "version": CACHE_VERSION, "kind": "solo",
+        "code": _code_fingerprint("des"),
+        "spec": dataclasses.asdict(spec), "seed": seed, "n_sm": n_sm,
+    })
+
+
+def _executor_solo_key(spec: KernelSpec, n_lanes: int,
+                       pool_jobs: int) -> str:
+    # pool_jobs is the worker-pool width the baseline was measured under:
+    # a baseline measured serially and one measured next to pool
+    # neighbours contending for CPU are different measurements and must
+    # not share a cache entry (the executor-sweep fidelity contract).
+    return _canonical_digest({
+        "version": CACHE_VERSION, "kind": "solo", "machine": "executor",
+        "measured": True, "code": _code_fingerprint("executor"),
+        "spec": dataclasses.asdict(spec), "n_lanes": n_lanes,
+        "pool_jobs": pool_jobs,
+    })
+
+
 def solo_runtime_cached(spec: KernelSpec, seed: int = 0, n_sm: int = N_SM,
                         cache_dir: Optional[Union[str, Path]] = None
                         ) -> float:
     """Measured FIFO solo runtime of ``spec``, through the sweep cache."""
     cache_dir = Path(cache_dir) if cache_dir is not None else None
-    key = _canonical_digest({
-        "version": CACHE_VERSION, "kind": "solo",
-        "code": _code_fingerprint("des"),
-        "spec": dataclasses.asdict(spec), "seed": seed, "n_sm": n_sm,
-    })
+    key = _des_solo_key(spec, seed, n_sm)
     hit = _cache_read(cache_dir, key)
     if hit is not None:
         return float(hit["runtime"])
@@ -362,10 +413,22 @@ def solo_runtime_cached(spec: KernelSpec, seed: int = 0, n_sm: int = N_SM,
     return rt
 
 
+def _measure_executor_solo(payload: dict) -> float:
+    """Measure one executor solo baseline (module-level: pickles into the
+    spawn pool when solos are measured under cell-like pool contention)."""
+    spec = payload["spec"]
+    job = executor_job(Arrival(spec, 0.0, uid=f"{spec.name}#0"),
+                       n_lanes=payload["n_lanes"],
+                       time_scale=payload["time_scale"])
+    return solo_runtime_executor(job, lambda: make_policy("fifo"),
+                                 n_lanes=payload["n_lanes"])
+
+
 def solo_runtime_executor_cached(
         spec: KernelSpec, n_lanes: int = 4,
         time_scale: float = DEFAULT_EXECUTOR_TIME_SCALE,
-        cache_dir: Optional[Union[str, Path]] = None) -> float:
+        cache_dir: Optional[Union[str, Path]] = None,
+        pool_jobs: int = 1) -> float:
     """Measured solo runtime of ``spec`` bridged onto the real-JAX lane
     executor, through the sweep cache.
 
@@ -374,21 +437,20 @@ def solo_runtime_executor_cached(
     expensive, stable part of an executor sweep and are deliberately reused
     across runs (the ``measured`` field marks the record as a wall-clock
     measurement, so consumers know reuse trades freshness for speed).
+    ``pool_jobs`` labels the pool-contention conditions of the measurement
+    and is part of the key (see :func:`_executor_solo_key`); this serial
+    helper only reads/writes the ``pool_jobs`` it is told, the pooled
+    measurement itself lives in :func:`run_sweep`.
     """
     cache_dir = Path(cache_dir) if cache_dir is not None else None
-    key = _canonical_digest({
-        "version": CACHE_VERSION, "kind": "solo", "machine": "executor",
-        "measured": True, "code": _code_fingerprint("executor"),
-        "spec": dataclasses.asdict(spec), "n_lanes": n_lanes,
-    })
+    key = _executor_solo_key(spec, n_lanes, pool_jobs)
     hit = _cache_read(cache_dir, key)
     if hit is not None:
         return float(hit["runtime"])
-    job = executor_job(Arrival(spec, 0.0, uid=f"{spec.name}#0"),
-                       n_lanes=n_lanes, time_scale=time_scale)
-    rt = solo_runtime_executor(job, lambda: make_policy("fifo"),
-                               n_lanes=n_lanes)
-    _cache_write(cache_dir, key, {"runtime": rt, "measured": True})
+    rt = _measure_executor_solo(
+        {"spec": spec, "n_lanes": n_lanes, "time_scale": time_scale})
+    _cache_write(cache_dir, key,
+                 {"runtime": rt, "measured": True, "pool_jobs": pool_jobs})
     return rt
 
 
@@ -417,6 +479,33 @@ def _cell_key(arrivals: Sequence[Arrival], policy: str, predictor: str,
     return _canonical_digest(payload)
 
 
+def _closed_cell_key(scn: ClosedLoopScenario, wl_name: str, policy: str,
+                     predictor: str, seed: int, n_sm: int,
+                     until: Optional[float], solo: Dict[str, float],
+                     machine: str = "des", nonce: Optional[str] = None,
+                     time_scale: Optional[float] = None) -> str:
+    # Closed-loop cells have no materialized arrival list to digest: the
+    # key digests the *process parameters* + seed instead (the process +
+    # the machine's deterministic completions fully determine the
+    # arrivals).  The DES fingerprint widens to "des-closed" because the
+    # process *code* in scenarios.py is now result-determining.
+    payload = {
+        "version": CACHE_VERSION, "kind": "cell", "machine": machine,
+        "closed_loop": True,
+        "code": _code_fingerprint(
+            "des-closed" if machine == "des" else machine),
+        "process": scn.process_params(),
+        "workload": wl_name,
+        "policy": policy, "predictor": predictor, "seed": seed,
+        "n_sm": n_sm, "until": until, "solo": solo,
+    }
+    if machine == "executor":
+        payload["measured"] = True
+        payload["nonce"] = nonce
+        payload["time_scale"] = time_scale
+    return _canonical_digest(payload)
+
+
 # ---------------------------------------------------------------- worker
 def _effective(arrivals: Sequence[Arrival], policy: str,
                solo: Dict[str, float]) -> Tuple[List[Arrival], str]:
@@ -434,16 +523,28 @@ def _effective(arrivals: Sequence[Arrival], policy: str,
 
 
 def _run_des_cell(payload: dict) -> dict:
-    """One DES simulation, evaluated over its observation window."""
+    """One DES simulation, evaluated over its observation window.
+
+    Open-loop payloads carry materialized ``arrivals``; closed-loop
+    payloads carry the scenario + workload name, and the worker builds a
+    fresh single-use arrival process (the completions of *this* cell's
+    policy drive it — that coupling is the experiment).
+    """
     solo: Dict[str, float] = payload["solo"]
+    if payload.get("closed_loop"):
+        scn: ClosedLoopScenario = payload["scenario_obj"]
+        arrivals, source = [], scn.make_process(payload["workload_name"])
+    else:
+        arrivals, source = payload["arrivals"], None
     res = simulate(
-        payload["arrivals"],
+        arrivals,
         lambda: make_policy(payload["policy"]),
         n_sm=payload["n_sm"],
         seed=payload["seed"],
         oracle_runtimes=solo,
         predictor=payload["predictor"],
         until=payload["until"],
+        arrival_source=source,
     )
     solo_by_key = {k: solo[res.name[k]] for k in res.turnaround}
     window = evaluate_window(
@@ -456,6 +557,7 @@ def _run_des_cell(payload: dict) -> dict:
         "finish": dict(res.finish),
         "unfinished": list(res.unfinished),
         "names": dict(res.name),
+        "arrival": dict(res.arrival),
     }
 
 
@@ -463,20 +565,32 @@ def _run_executor_cell(payload: dict) -> dict:
     """One real-JAX executor run over the bridged workload.
 
     Same label-free record shape as the DES path (``window`` / ``turnaround``
-    / ``finish`` / ``unfinished`` / ``names``), plus ``measured: true`` —
-    every float here is a wall-clock measurement.
+    / ``finish`` / ``unfinished`` / ``names`` / ``arrival``), plus
+    ``measured: true`` — every float here is a wall-clock measurement.
+    Closed-loop payloads attach the arrival process through the same
+    feedback edge as the DES, with the bridge scaling scenario cycles to
+    lane seconds in both directions.
     """
     from .executor import LaneExecutor
 
     solo: Dict[str, float] = payload["solo"]
+    n_lanes = payload["n_sm"]
+    time_scale = payload["time_scale"]
     ex = LaneExecutor([], make_policy(payload["policy"]),
-                      n_lanes=payload["n_sm"],
-                      predictor=payload["predictor"])
-    for key, job in executor_workload(payload["arrivals"],
-                                      n_lanes=payload["n_sm"],
-                                      time_scale=payload["time_scale"]):
-        ex.add_job(job, key=key)
+                      n_lanes=n_lanes,
+                      predictor=payload["predictor"],
+                      job_bridge=lambda a: executor_job(
+                          a, n_lanes=n_lanes, time_scale=time_scale))
     ex.oracle_runtimes.update(solo)
+    if payload.get("closed_loop"):
+        scn: ClosedLoopScenario = payload["scenario_obj"]
+        ex.attach_arrival_source(scn.make_process(payload["workload_name"]),
+                                 time_scale=time_scale)
+    else:
+        for key, job in executor_workload(payload["arrivals"],
+                                          n_lanes=n_lanes,
+                                          time_scale=time_scale):
+            ex.add_job(job, key=key)
     ex.run(until=payload["until"])
     w = ex.window()
     solo_by_key = {k: solo[w.names[k]] for k in w.turnaround}
@@ -490,6 +604,7 @@ def _run_executor_cell(payload: dict) -> dict:
         "finish": dict(w.finish),
         "unfinished": list(w.unfinished),
         "names": dict(w.names),
+        "arrival": dict(w.arrival),
         "measured": True,
     }
 
@@ -511,38 +626,50 @@ def _run_cell(payload: dict) -> dict:
 
 
 # ---------------------------------------------------------------- runner
-def run_sweep(spec: SweepSpec, jobs: int = 1,
-              cache_dir: Optional[Union[str, Path]] = None) -> SweepResult:
-    """Execute every cell of ``spec``; see the module docstring."""
-    t0 = time.perf_counter()
-    cache_dir = Path(cache_dir) if cache_dir is not None else None
-    on_executor = spec.machine == "executor"
-    # Executor cells are measurements: a fresh nonce per run keeps them out
-    # of cross-run cache hits while in-run dedup still works.
-    nonce = uuid.uuid4().hex if on_executor else None
+def _materialize(spec: SweepSpec) -> Tuple[List[tuple], Dict[tuple, KernelSpec]]:
+    """Pass 1: expand the grid into per-(scenario, seed) workloads and the
+    solo-oracle demand.
 
-    # Materialize workloads once per (scenario, seed) and measure the solo
-    # oracle for every kernel they mention (cached; cheap next to cells).
-    pending: List[dict] = []
-    ordered: List[Tuple[str, dict]] = []   # (key, labels) in cell order
-    records: Dict[str, dict] = {}          # key -> raw record (disk hits)
-    solo_memo: Dict[tuple, float] = {}     # in-memory; scenarios share kernels
-    hits = 0
+    Returns ``(worklist, solo_specs)``: worklist entries are
+    ``(scn, seed, wl_name, arrivals_or_None, wl_specs)`` — ``arrivals`` is
+    ``None`` for closed-loop workloads (the worker builds the process) and
+    ``wl_specs`` maps every kernel name the workload may mention to its
+    spec; ``solo_specs`` maps solo memo keys to the spec to measure.
+
+    Solo oracles are keyed by *spec content*, not name: two workloads may
+    reuse a kernel name with different spec fields, and a name-keyed table
+    would last-write-win and corrupt the earlier workload's STP/ANTT.
+    Within one workload the name must be unambiguous (the machines look
+    oracles up by spec name), so a same-name conflict there is an error.
+    """
+    on_executor = spec.machine == "executor"
+    worklist: List[tuple] = []
+    solo_specs: Dict[tuple, KernelSpec] = {}
+
+    def memo_key(kspec: KernelSpec, seed: int) -> tuple:
+        return (kspec, spec.machine, None if on_executor else seed,
+                spec.n_sm)
+
     for scn_ref in spec.scenarios:
         base = make_scenario(scn_ref)
         for seed in spec.seeds:
             scn = base.reseeded(seed)
-            workloads = scn.workloads()
-            for wl_name, arrivals in workloads:
-                # Solo oracles are keyed by *spec content*, not name: two
-                # workloads may reuse a kernel name with different spec
-                # fields, and a name-keyed table would last-write-win and
-                # corrupt the earlier workload's STP/ANTT.  Within one
-                # workload the name must be unambiguous (the machines look
-                # oracles up by spec name), so a same-name conflict there
-                # is an error.
+            if isinstance(scn, ClosedLoopScenario):
+                # No arrival list exists yet — the mix declares every
+                # kernel the process may emit, so the solo oracle covers
+                # the full mix up front.
+                mix = dict(scn.mix_specs())
+                for name, kspec in mix.items():
+                    if kspec.name != name:
+                        raise ValueError(
+                            f"mix_specs() of {scn.name!r} maps {name!r} "
+                            f"to a spec named {kspec.name!r}")
+                    solo_specs[memo_key(kspec, seed)] = kspec
+                for wl_name in scn.process_names():
+                    worklist.append((scn, seed, wl_name, None, mix))
+                continue
+            for wl_name, arrivals in scn.workloads():
                 wl_specs: Dict[str, KernelSpec] = {}
-                wl_solo: Dict[str, float] = {}
                 for a in arrivals:
                     name = a.spec.name
                     prev = wl_specs.get(name)
@@ -553,50 +680,156 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
                             "oracles are looked up by name within one "
                             "workload")
                     wl_specs[name] = a.spec
-                    memo_key = (a.spec, spec.machine,
-                                None if on_executor else seed, spec.n_sm)
-                    if memo_key not in solo_memo:
-                        if on_executor:
-                            solo_memo[memo_key] = solo_runtime_executor_cached(
-                                a.spec, n_lanes=spec.n_sm,
-                                time_scale=spec.time_scale,
-                                cache_dir=cache_dir)
-                        else:
-                            solo_memo[memo_key] = solo_runtime_cached(
-                                a.spec, seed=seed, n_sm=spec.n_sm,
-                                cache_dir=cache_dir)
-                    wl_solo[name] = solo_memo[memo_key]
-                for policy in spec.policies:
-                    eff_arrivals, eff_policy = _effective(
-                        arrivals, policy, wl_solo)
-                    for pred in spec.predictors:
-                        pred_name = DEFAULT_PREDICTOR if pred is None else pred
-                        key = _cell_key(eff_arrivals, eff_policy, pred_name,
-                                        seed, spec.n_sm, spec.until, wl_solo,
-                                        machine=spec.machine, nonce=nonce,
-                                        time_scale=spec.time_scale)
-                        ordered.append((key, {
-                            "scenario": scn.name, "workload": wl_name,
-                            "policy": policy, "predictor": pred_name,
-                            "seed": seed,
-                        }))
-                        if key in records:
-                            continue   # in-flight dedup (e.g. SJF == FIFO)
-                        hit = _cache_read(cache_dir, key)
-                        if hit is not None:
-                            hits += 1
-                            records[key] = hit
-                            continue
-                        records[key] = _PENDING
-                        pending.append({
-                            "key": key, "arrivals": eff_arrivals,
-                            "policy": eff_policy, "predictor": pred_name,
-                            "seed": seed, "n_sm": spec.n_sm,
-                            "until": spec.until, "solo": wl_solo,
-                            "machine": spec.machine,
-                            "time_scale": spec.time_scale,
-                            "cache_dir": cache_dir,
-                        })
+                    solo_specs[memo_key(a.spec, seed)] = a.spec
+                worklist.append((scn, seed, wl_name, arrivals, wl_specs))
+    return worklist, solo_specs
+
+
+def _measure_solos(solo_specs: Dict[tuple, KernelSpec], spec: SweepSpec,
+                   jobs: int, cache_dir: Optional[Path]
+                   ) -> Tuple[Dict[tuple, float], Dict[str, int]]:
+    """Measure (or load) every solo baseline the sweep needs.
+
+    DES solos are deterministic simulations — serial and cached as before.
+    Executor solos are wall-clock measurements, and with ``jobs > 1`` the
+    *cells* will run inside a worker pool contending for CPU; baselines
+    measured serially in the quiet parent would then be systematically
+    faster than the co-run cells, inflating every slowdown (the ROADMAP
+    executor-sweep fidelity item).  So with ``jobs > 1`` the baselines are
+    measured through the same spawn pool, same width, the cache key
+    records the pool width they were measured under, and any miss
+    re-measures the sweep's *whole* solo set together (partial fills
+    would measure nearly alone in the pool and undercount contention).
+    """
+    memo: Dict[tuple, float] = {}
+    computed = 0
+    if spec.machine != "executor":
+        for mk, kspec in solo_specs.items():
+            seed = mk[2]
+            key = _des_solo_key(kspec, seed, spec.n_sm)
+            hit = _cache_read(cache_dir, key)
+            if hit is not None:
+                memo[mk] = float(hit["runtime"])
+                continue
+            computed += 1
+            rt = solo_runtime(kspec, lambda: make_policy("fifo"),
+                              n_sm=spec.n_sm, seed=seed)
+            _cache_write(cache_dir, key, {"runtime": rt})
+            memo[mk] = rt
+        return memo, {"solo_computed": computed, "solo_pool_jobs": 1}
+
+    pool_jobs = max(1, jobs)
+    keys = {mk: _executor_solo_key(kspec, spec.n_sm, pool_jobs)
+            for mk, kspec in solo_specs.items()}
+    hits = {mk: _cache_read(cache_dir, key) for mk, key in keys.items()}
+    if pool_jobs > 1 and any(hit is None for hit in hits.values()):
+        # All-or-nothing under a pool: a lone miss dispatched through an
+        # otherwise-idle pool would measure *uncontended* and then sit in
+        # the cache next to contention-measured neighbours — the exact
+        # bias this path exists to remove.  Re-measuring the whole solo
+        # set together keeps every baseline of this sweep mutually
+        # consistent (solo sets are small next to cells).
+        hits = {mk: None for mk in hits}
+    misses = [mk for mk, hit in hits.items() if hit is None]
+    for mk, hit in hits.items():
+        if hit is not None:
+            memo[mk] = float(hit["runtime"])
+    if misses:
+        payloads = [{"spec": solo_specs[mk], "n_lanes": spec.n_sm,
+                     "time_scale": spec.time_scale} for mk in misses]
+        if pool_jobs > 1:
+            ctx = multiprocessing.get_context("spawn")
+            with ProcessPoolExecutor(max_workers=pool_jobs,
+                                     mp_context=ctx) as pool:
+                runtimes = list(pool.map(_measure_executor_solo, payloads,
+                                         chunksize=1))
+        else:
+            runtimes = [_measure_executor_solo(p) for p in payloads]
+        for mk, rt in zip(misses, runtimes):
+            memo[mk] = float(rt)
+            _cache_write(cache_dir, keys[mk],
+                         {"runtime": rt, "measured": True,
+                          "pool_jobs": pool_jobs})
+        computed = len(misses)
+    return memo, {"solo_computed": computed, "solo_pool_jobs": pool_jobs}
+
+
+def run_sweep(spec: SweepSpec, jobs: int = 1,
+              cache_dir: Optional[Union[str, Path]] = None) -> SweepResult:
+    """Execute every cell of ``spec``; see the module docstring."""
+    t0 = time.perf_counter()
+    cache_dir = Path(cache_dir) if cache_dir is not None else None
+    on_executor = spec.machine == "executor"
+    # Executor cells are measurements: a fresh nonce per run keeps them out
+    # of cross-run cache hits while in-run dedup still works.
+    nonce = uuid.uuid4().hex if on_executor else None
+
+    worklist, solo_specs = _materialize(spec)
+    solo_memo, solo_stats = _measure_solos(solo_specs, spec, jobs, cache_dir)
+
+    pending: List[dict] = []
+    ordered: List[Tuple[str, dict]] = []   # (key, labels) in cell order
+    records: Dict[str, dict] = {}          # key -> raw record (disk hits)
+    hits = 0
+    for scn, seed, wl_name, arrivals, wl_specs in worklist:
+        closed = arrivals is None
+        wl_solo = {
+            name: solo_memo[(kspec, spec.machine,
+                             None if on_executor else seed, spec.n_sm)]
+            for name, kspec in wl_specs.items()
+        }
+        for policy in spec.policies:
+            if closed and policy in ORACLE_ORDER_POLICIES:
+                raise ValueError(
+                    f"policy {policy!r} is realized as FIFO over an "
+                    "oracle-reordered arrival list, but closed-loop "
+                    f"scenario {scn.name!r} has no materialized arrivals "
+                    "to reorder")
+            if closed:
+                eff_arrivals, eff_policy = None, policy
+            else:
+                eff_arrivals, eff_policy = _effective(
+                    arrivals, policy, wl_solo)
+            for pred in spec.predictors:
+                pred_name = DEFAULT_PREDICTOR if pred is None else pred
+                if closed:
+                    key = _closed_cell_key(
+                        scn, wl_name, eff_policy, pred_name, seed,
+                        spec.n_sm, spec.until, wl_solo,
+                        machine=spec.machine, nonce=nonce,
+                        time_scale=spec.time_scale)
+                else:
+                    key = _cell_key(eff_arrivals, eff_policy, pred_name,
+                                    seed, spec.n_sm, spec.until, wl_solo,
+                                    machine=spec.machine, nonce=nonce,
+                                    time_scale=spec.time_scale)
+                ordered.append((key, {
+                    "scenario": scn.name, "workload": wl_name,
+                    "policy": policy, "predictor": pred_name,
+                    "seed": seed,
+                }))
+                if key in records:
+                    continue   # in-flight dedup (e.g. SJF == FIFO)
+                hit = _cache_read(cache_dir, key)
+                if hit is not None:
+                    hits += 1
+                    records[key] = hit
+                    continue
+                records[key] = _PENDING
+                payload = {
+                    "key": key, "arrivals": eff_arrivals,
+                    "policy": eff_policy, "predictor": pred_name,
+                    "seed": seed, "n_sm": spec.n_sm,
+                    "until": spec.until, "solo": wl_solo,
+                    "machine": spec.machine,
+                    "time_scale": spec.time_scale,
+                    "cache_dir": cache_dir,
+                }
+                if closed:
+                    payload["closed_loop"] = True
+                    payload["scenario_obj"] = scn
+                    payload["workload_name"] = wl_name
+                pending.append(payload)
 
     if pending:
         if jobs > 1:
@@ -621,6 +854,7 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
         "deduplicated": len(ordered) - len(records),
         "jobs": jobs, "machine": spec.machine,
         "elapsed_s": time.perf_counter() - t0,
+        **solo_stats,
     }
     return SweepResult(cells, stats)
 

@@ -31,7 +31,7 @@ from pathlib import Path
 import jax
 
 from repro.core.predictor import staircase_runtime
-from repro.core.scenarios import SCENARIOS, make_scenario
+from repro.core.scenarios import make_scenario, open_loop_names
 from repro.configs import ARCHS, SHAPES, get_arch
 from repro.configs.shapes import SHAPE_ORDER, shape_applicable
 from repro.launch.mesh import make_production_mesh
@@ -219,9 +219,11 @@ def main() -> None:
                     help="use the 2x16x16 multi-pod mesh (default 16x16)")
     ap.add_argument("--out", default="artifacts/dryrun", type=Path)
     ap.add_argument("--skip-existing", action="store_true")
-    # trace-replay is excluded: it needs a path/trace the CLI doesn't take.
+    # trace-replay is excluded (it needs a path/trace the CLI doesn't
+    # take); closed-loop scenarios are excluded because compile cells are
+    # ordered by a fixed, materialized submission stream.
     ap.add_argument("--scenario", default=None,
-                    choices=sorted(set(SCENARIOS) - {"trace-replay"}),
+                    choices=sorted(set(open_loop_names()) - {"trace-replay"}),
                     help="order the compile cells as a submission stream "
                          "drawn from this registered arrival process "
                          "(deterministic per --seed)")

@@ -29,10 +29,25 @@ jitted synthetic blocks (:func:`repro.core.scenarios.executor_workload` —
 the same bridge executor sweeps use), and solo baselines go through the
 content-addressed sweep cache
 (:func:`repro.core.sweep.solo_runtime_executor_cached`), so repeated
-serving runs reuse them.  Baselines are keyed by spec content, and
-``--max-blocks`` rewrites the specs before bridging — so they are shared
-with executor *sweeps* only when the grids match (e.g. ``--max-blocks 0``,
-or a scenario whose declared grids are already small).
+serving runs reuse them.  Baselines are keyed by spec content plus the
+pool width they were measured under, and ``--max-blocks`` rewrites the
+specs before bridging — so they are shared with executor *sweeps* only
+when the grids match (e.g. ``--max-blocks 0``, or a scenario whose
+declared grids are already small) AND the sweep ran serially
+(``--jobs 1``): a ``--jobs > 1`` sweep caches pool-contention-measured
+baselines under a different key, which this serial frontend deliberately
+does not reuse.
+
+**Closed-loop driver** (``--closed-loop N``): instead of pacing
+submissions open-loop, ``N`` client coroutines each hold one job in
+flight — submit, await completion, optionally think ``Exp(--think)``
+seconds, resubmit — until ``--requests`` total jobs complete.  This
+exercises the async service at a *target concurrency* (the serving mirror
+of the ``think-time``/``mgk-closed`` sweep scenarios): offered load
+tracks service capacity, which is where preemptive SRTF earns or loses
+its win.  Reported metrics are the steady-state queueing view
+(:func:`repro.core.metrics.evaluate_queueing` over machine-time
+arrivals/finishes) plus the usual STP/ANTT.
 
 Example::
 
@@ -44,23 +59,27 @@ Example::
     PYTHONPATH=src python -m repro.launch.serve \
         --scenario poisson-open --scenario-kernels --policy srtf \
         --time-scale 1e-6
+    PYTHONPATH=src python -m repro.launch.serve \
+        --jobs yi-6b:6,minicpm3-4b:4 --closed-loop 3 --requests 12 \
+        --policy srtf --compare-fifo
 """
 
 from __future__ import annotations
 
 import argparse
 import asyncio
+import itertools
 from typing import Callable, Dict, List, Tuple
 
 from repro.configs import ARCHS, get_arch
 from repro.core.executor import LaneExecutor
 from repro.core.jobs import make_serve_job
-from repro.core.metrics import evaluate
+from repro.core.metrics import evaluate, evaluate_queueing
 from repro.core.policies import make_policy
 from repro.core.scenarios import (
-    SCENARIOS,
     executor_job,
     make_scenario,
+    open_loop_names,
     submission_offsets,
 )
 from repro.core.scheduler_service import SchedulerService
@@ -205,14 +224,93 @@ async def run_service(args, policy: str, solo: Dict[object, float]):
     m = evaluate(turnaround, solo_by_key)
     print(f"[serve] policy={policy:14s} STP={m.stp:.3f} ANTT={m.antt:.3f} "
           f"fairness={m.fairness:.3f}")
+    print_tenant_report(service)
+    for r in sorted(results, key=lambda r: r.key):
+        print(f"    {r.key}: turnaround={r.turnaround:.2f}s")
+    return m
+
+
+def print_tenant_report(service: SchedulerService) -> None:
     for tenant, info in sorted(service.tenant_report().items()):
         tm = info["metrics"]
         if tm is not None:
             print(f"    tenant={tenant}: jobs={info['jobs']} "
                   f"STP={tm['stp']:.3f} ANTT={tm['antt']:.3f}")
-    for r in sorted(results, key=lambda r: r.key):
-        print(f"    {r.key}: turnaround={r.turnaround:.2f}s")
-    return m
+
+
+def closed_loop_items(args, solo: Dict[object, float]):
+    """The job menu closed-loop clients cycle through: per-item
+    ``(make(i) -> job, tenant, solo_runtime)``.
+
+    Arrival *times* are deliberately absent — in closed-loop mode pacing
+    comes from completions (and ``--think``), not from a scenario clock —
+    so scenario-kernel jobs are bridged at arrival time 0 and submitted
+    whenever a client's previous job finishes.
+    """
+    if args.scenario_kernels:
+        return [
+            (lambda i, a=a: executor_job(
+                Arrival(a.spec, 0.0), n_lanes=args.lanes,
+                time_scale=args.time_scale),
+             a.spec.name, solo[a.spec])
+            for a in scenario_arrivals(args)
+        ]
+    return [
+        (lambda i, arch_id=arch_id, blocks=blocks: build_job(
+            args, arch_id, blocks, args.seed + i),
+         arch_id, solo[(arch_id, blocks)])
+        for arch_id, blocks in parse_jobs(args)
+    ]
+
+
+async def run_service_closed_loop(args, policy: str,
+                                  solo: Dict[object, float]):
+    """One closed-loop policy run: ``--closed-loop`` concurrent clients,
+    each looping submit -> await -> think, against a live service."""
+    import numpy as np
+
+    service = SchedulerService(n_lanes=args.lanes, policy=policy,
+                               predictor=args.predictor)
+    items = closed_loop_items(args, solo)
+    counter = itertools.count()
+    results = []
+    solo_by_key: Dict[str, float] = {}
+
+    async def client(cid: int) -> None:
+        rng = np.random.default_rng((args.seed, cid))
+        while True:
+            i = next(counter)
+            if i >= args.requests:
+                return
+            if args.think > 0.0:
+                await asyncio.sleep(float(rng.exponential(args.think)))
+            make, tenant, solo_rt = items[i % len(items)]
+            handle = service.submit(make(i), tenant=tenant,
+                                    solo_runtime=solo_rt)
+            solo_by_key[handle.key] = solo_rt
+            results.append(await handle.result())
+
+    try:
+        await asyncio.gather(
+            *(client(c) for c in range(args.closed_loop)))
+    finally:
+        service.close()
+
+    # Machine-time (virtual-clock) arrivals/finishes: the queueing view is
+    # of the machine under load, not of wall-clock client latency.
+    q = evaluate_queueing({r.key: r.arrival for r in results},
+                          {r.key: r.finish for r in results},
+                          end_time=service.machine_time,
+                          warmup_frac=args.warmup_frac)
+    m = evaluate({r.key: r.turnaround for r in results}, solo_by_key)
+    print(f"[serve] policy={policy:14s} closed-loop={args.closed_loop} "
+          f"requests={q.n_completed} mean_rt={q.mean_response:.3f}s "
+          f"p95_rt={q.p95_response:.3f}s in_system={q.mean_in_system:.2f} "
+          f"xput={q.throughput:.2f}/s")
+    print(f"    STP={m.stp:.3f} ANTT={m.antt:.3f} "
+          f"fairness={m.fairness:.3f}")
+    print_tenant_report(service)
+    return q
 
 
 def run_policy(args, policy: str, solo: Dict[Tuple[str, int], float]):
@@ -233,9 +331,23 @@ def main() -> None:
     ap.add_argument("--tokens-per-block", type=int, default=8)
     ap.add_argument("--stagger", type=float, default=0.02,
                     help="seconds between async job submissions")
-    # trace-replay is excluded: it needs a path/trace the CLI doesn't take.
+    ap.add_argument("--closed-loop", type=int, default=0,
+                    help="drive the service closed-loop at this target "
+                         "concurrency (N clients, each resubmitting when "
+                         "its job finishes; 0 = open-loop pacing)")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="total jobs a closed-loop run completes")
+    ap.add_argument("--think", type=float, default=0.0,
+                    help="mean Exp think seconds between a closed-loop "
+                         "client's completion and its next submission")
+    ap.add_argument("--warmup-frac", type=float, default=0.0,
+                    help="fraction of the closed-loop window trimmed "
+                         "before computing queueing metrics")
+    # trace-replay is excluded (it needs a path/trace the CLI doesn't
+    # take); closed-loop scenarios are excluded because this flag paces a
+    # fixed submission stream — closed-loop serving is --closed-loop.
     ap.add_argument("--scenario", default=None,
-                    choices=sorted(set(SCENARIOS) - {"trace-replay"}),
+                    choices=sorted(set(open_loop_names()) - {"trace-replay"}),
                     help="draw submission offsets from this registered "
                          "arrival process instead of a fixed stagger "
                          "(e.g. poisson-open, bursty)")
@@ -248,7 +360,7 @@ def main() -> None:
                          "real-jitted blocks) instead of --jobs archs")
     ap.add_argument("--cache-dir", default="artifacts/sweep_cache",
                     help="sweep cache for --scenario-kernels solo "
-                         "baselines (shared with executor sweeps)")
+                         "baselines (shared with jobs=1 executor sweeps)")
     ap.add_argument("--max-blocks", type=int, default=16,
                     help="cap scenario grids at this many real blocks per "
                          "job (with --scenario-kernels; 0 = uncapped)")
@@ -257,6 +369,15 @@ def main() -> None:
     if args.scenario_kernels and not args.scenario:
         ap.error("--scenario-kernels requires --scenario")
     solo = measure_solo(args)
+    if args.closed_loop > 0:
+        q = asyncio.run(run_service_closed_loop(args, args.policy, solo))
+        if args.compare_fifo and args.policy != "fifo":
+            qf = asyncio.run(run_service_closed_loop(args, "fifo", solo))
+            print(f"[serve] {args.policy} vs fifo at concurrency "
+                  f"{args.closed_loop}: mean_rt "
+                  f"{qf.mean_response / q.mean_response:.2f}x, p95_rt "
+                  f"{qf.p95_response / q.p95_response:.2f}x")
+        return
     m = run_policy(args, args.policy, solo)
     if args.compare_fifo and args.policy != "fifo":
         mf = run_policy(args, "fifo", solo)

@@ -9,6 +9,7 @@ from repro.core.metrics import (
     MetricsError,
     WorkloadMetrics,
     evaluate,
+    evaluate_queueing,
     evaluate_window,
     geomean,
     summarize,
@@ -86,6 +87,74 @@ def test_evaluate_window_nothing_finished_is_nan_not_error():
     assert math.isnan(w.stp) and math.isnan(w.antt) and math.isnan(w.fairness)
     assert w.workload_metrics is None
     assert w.throughput == 0.0
+
+
+# ----------------------------------------------------- queueing metrics
+def test_evaluate_queueing_hand_computed():
+    arrival = {"a": 0.0, "b": 10.0, "c": 90.0}
+    finish = {"a": 20.0, "b": 40.0}          # c is still in flight
+    q = evaluate_queueing(arrival, finish, end_time=100.0, warmup_frac=0.0)
+    assert q.mean_response == pytest.approx(25.0)     # (20 + 30) / 2
+    assert q.p95_response == pytest.approx(30.0)      # nearest-rank of 2
+    # in-system integral: a contributes 20, b 30, c 10 (90 -> window end)
+    assert q.mean_in_system == pytest.approx(60.0 / 100.0)
+    assert q.throughput == pytest.approx(2.0 / 100.0)
+    assert q.n_completed == 2 and q.n_observed == 3
+    assert q.warmup == 0.0 and q.end_time == 100.0
+
+
+def test_evaluate_queueing_warmup_trims_arrivals_not_the_integral():
+    arrival = {"cold": 0.0, "hot": 60.0}
+    finish = {"cold": 90.0, "hot": 80.0}
+    q = evaluate_queueing(arrival, finish, end_time=100.0, warmup_frac=0.5)
+    # response stats cover only the post-warmup arrival...
+    assert q.n_observed == 1 and q.n_completed == 1
+    assert q.mean_response == pytest.approx(20.0)
+    # ...but the in-system integral still counts the straddling kernel,
+    # clipped at the warmup edge: cold 50->90 (40) + hot 60->80 (20),
+    # and throughput counts BOTH post-warmup departures (the drained
+    # backlog kernel is a real steady-state departure).
+    assert q.mean_in_system == pytest.approx(60.0 / 50.0)
+    assert q.throughput == pytest.approx(2.0 / 50.0)
+
+
+def test_evaluate_queueing_ignores_arrivals_past_the_window():
+    # Closed-loop feedback can schedule arrivals past a truncation
+    # horizon; they never entered the observed system and must not count.
+    arrival = {"a": 0.0, "late": 150.0}
+    finish = {"a": 20.0}
+    q = evaluate_queueing(arrival, finish, end_time=100.0, warmup_frac=0.0)
+    assert q.n_observed == 1 and q.n_completed == 1
+    assert q.mean_in_system == pytest.approx(20.0 / 100.0)
+
+
+def test_evaluate_queueing_degenerate_inputs_raise_explicitly():
+    with pytest.raises(MetricsError, match="no arrivals"):
+        evaluate_queueing({}, {}, end_time=10.0)
+    with pytest.raises(MetricsError, match="window"):
+        evaluate_queueing({"a": 0.0}, {"a": 1.0}, end_time=0.0)
+    with pytest.raises(MetricsError, match="warmup_frac"):
+        evaluate_queueing({"a": 0.0}, {"a": 1.0}, end_time=10.0,
+                          warmup_frac=1.0)
+    with pytest.raises(MetricsError, match="warmup_frac"):
+        evaluate_queueing({"a": 0.0}, {"a": 1.0}, end_time=10.0,
+                          warmup_frac=-0.1)
+    with pytest.raises(MetricsError, match="before it arrived"):
+        evaluate_queueing({"a": 5.0}, {"a": 1.0}, end_time=10.0)
+    with pytest.raises(MetricsError, match="no arrival"):
+        evaluate_queueing({"a": 0.0}, {"ghost": 1.0}, end_time=10.0)
+
+
+def test_evaluate_queueing_zero_completions_after_trim_raises():
+    # Everything arrived and finished inside the warmup: steady state is
+    # unobserved, which must be an explicit error (not NaN, not a crash).
+    with pytest.raises(MetricsError, match="after warmup trim"):
+        evaluate_queueing({"a": 1.0}, {"a": 2.0}, end_time=100.0,
+                          warmup_frac=0.5)
+    # in flight past the window edge counts as not completed
+    with pytest.raises(MetricsError, match="after warmup trim"):
+        evaluate_queueing({"a": 60.0}, {"a": 150.0}, end_time=100.0,
+                          warmup_frac=0.5)
 
 
 def test_summarize_is_geomean_per_metric():

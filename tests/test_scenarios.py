@@ -10,8 +10,10 @@ import pytest
 
 from repro.core.scenarios import (
     SCENARIOS,
+    Diurnal,
     Scenario,
     TraceReplay,
+    fit_diurnal_profile,
     make_scenario,
     register_scenario,
     submission_offsets,
@@ -25,7 +27,7 @@ from repro.core.workload import (
     two_program_workloads,
 )
 
-RANDOMIZED = ("poisson-open", "bursty", "nprogram-mix")
+RANDOMIZED = ("poisson-open", "bursty", "nprogram-mix", "diurnal")
 
 
 # ---------------------------------------------------------------- registry
@@ -158,6 +160,92 @@ def test_trace_replay_roundtrip(tmp_path):
         TraceReplay(trace=trace, path=path)
     with pytest.raises(ValueError, match="spec table"):
         TraceReplay(trace=[{"kernel": "nope"}]).workloads()
+
+
+# ---------------------------------------------------------------- diurnal
+def test_diurnal_concentrates_arrivals_in_high_rate_segments():
+    # Rate 1.0 for the first half of the day, 0.0 for the second: every
+    # arrival must land in the first half of some period (cumulative-
+    # hazard inversion skips zero-rate segments exactly).
+    scn = Diurnal(seed=0, profile=(1.0, 0.0), segment=1_000.0,
+                  peak_interarrival=50.0, n_arrivals=100, n_workloads=1)
+    (_, arrivals), = scn.workloads()
+    assert len(arrivals) == 100
+    for a in arrivals:
+        assert a.time % 2_000.0 < 1_000.0
+
+
+def test_diurnal_rejects_degenerate_profiles():
+    with pytest.raises(ValueError, match="profile"):
+        Diurnal(profile=())
+    with pytest.raises(ValueError, match="profile"):
+        Diurnal(profile=(0.0, 0.0))
+    with pytest.raises(ValueError, match="> 0"):
+        Diurnal(peak_interarrival=0.0)
+
+
+def test_fit_diurnal_profile_recovers_the_rate_shape():
+    # Synthesize a long stream from a known day/night profile, fit it
+    # back: the peak segment must be identified and the trough's relative
+    # rate must come out well below the peak's.
+    true_profile = (0.2, 1.0, 0.5, 0.1)
+    scn = Diurnal(seed=1, profile=true_profile, segment=10_000.0,
+                  peak_interarrival=200.0, n_arrivals=2_000, n_workloads=1)
+    (_, arrivals), = scn.workloads()
+    period = 10_000.0 * len(true_profile)
+    fitted, peak_ia = fit_diurnal_profile([a.time for a in arrivals],
+                                          n_segments=4, period=period)
+    assert max(fitted) == 1.0
+    assert fitted.index(1.0) == 1                 # the true peak segment
+    assert fitted[3] < 0.35                       # the true trough
+    assert peak_ia == pytest.approx(200.0, rel=0.25)
+
+
+def test_fit_diurnal_profile_exact_multiple_span_counts_no_phantom_period():
+    # Uniform arrivals every 10 cycles over [0, 990] fitted with
+    # period == max(times): the span is exactly one period and must be
+    # counted as one (a phantom second period would halve every rate).
+    times = [10.0 * i for i in range(100)]          # max = 990
+    profile, peak_ia = fit_diurnal_profile(times, n_segments=1,
+                                           period=990.0)
+    assert profile == (1.0,)
+    assert peak_ia == pytest.approx(9.9)
+    # The arrival AT the period multiple closes the previous period: it
+    # belongs to the last segment, not segment 0 (which would otherwise
+    # read as the busier half of a uniform stream).
+    profile2, _ = fit_diurnal_profile(times, n_segments=2, period=990.0)
+    assert profile2 == (1.0, 1.0)
+    # from_trace's default period is the trace span — same property.
+    trace = [{"kernel": "JPEG-d", "time": t} for t in times]
+    scn = Diurnal.from_trace(trace=trace, n_segments=1,
+                             names=("JPEG-d",), n_arrivals=10)
+    assert scn.peak_interarrival == pytest.approx(9.9)
+
+
+def test_fit_diurnal_profile_rejects_degenerate_input():
+    with pytest.raises(ValueError, match="zero arrivals"):
+        fit_diurnal_profile([], 4, 100.0)
+    with pytest.raises(ValueError, match="period"):
+        fit_diurnal_profile([1.0], 4, 0.0)
+    with pytest.raises(ValueError, match="negative"):
+        fit_diurnal_profile([-1.0], 4, 100.0)
+
+
+def test_diurnal_from_trace_calibrates_a_runnable_scenario():
+    trace = [{"kernel": "JPEG-d", "time": float(t)}
+             for t in (0, 10, 20, 30, 40, 900)]
+    scn = Diurnal.from_trace(trace=trace, n_segments=2, period=1_000.0,
+                             seed=0, names=("JPEG-d",), n_arrivals=50,
+                             n_workloads=1)
+    # 5 of 6 arrivals in the first half-day: the fitted first segment is
+    # the peak and the generated stream leans the same way.
+    assert scn.profile[0] == 1.0 and scn.profile[1] < scn.profile[0]
+    assert scn.segment == pytest.approx(500.0)
+    (_, arrivals), = scn.workloads()
+    first_half = sum(1 for a in arrivals if a.time % 1_000.0 < 500.0)
+    assert first_half > len(arrivals) * 0.6
+    with pytest.raises(ValueError, match="no arrivals"):
+        Diurnal.from_trace(trace=[], n_segments=2, period=10.0)
 
 
 # -------------------------------------------------------------- utilities
