@@ -2,7 +2,8 @@ PY := python
 export PYTHONPATH := src
 
 .PHONY: check check-all test test-all smoke smoke-sweep \
-        smoke-sweep-closedloop smoke-sweep-executor golden
+        smoke-sweep-closedloop smoke-sweep-executor golden \
+        bench bench-smoke
 
 # Fast tier (default): deselects @pytest.mark.slow (golden-trace sweep
 # regression, full Table-5 cells, 8-device distributed run).
@@ -39,6 +40,17 @@ smoke-sweep-executor:
 # runner — small spec, multiprocess fan-out.
 smoke-sweep-closedloop:
 	$(PY) -m benchmarks.run closedloop --jobs 2 --subset 1 --no-cache
+
+# Persistent DES perf lane: blocks/sec + cold/warm sweep wall time on
+# standardized workloads, written to BENCH_des.json at the repo root
+# (benchmarks/perf.py; every perf PR reports against this file).
+bench:
+	$(PY) -m benchmarks.perf
+
+# Reduced perf lane for CI: same row shape, small workloads; the JSON is
+# uploaded as a per-commit artifact so the trajectory accumulates.
+bench-smoke:
+	$(PY) -m benchmarks.perf --smoke --jobs 2 --repeat 1
 
 check: test smoke
 

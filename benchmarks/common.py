@@ -31,6 +31,7 @@ from repro.core import (
     simulate,
     solo_runtime_cached,
 )
+from repro.core.sweep import run_sweeps
 from repro.core.metrics import WorkloadMetrics
 from repro.core.scenarios import ClosedLoopScenario, PairStagger, Scenario
 from repro.core.workload import reorder_for_oracle
@@ -119,6 +120,20 @@ def _subset(scenario: Scenario) -> Scenario:
     return _SubsetScenario(scenario, SUBSET)
 
 
+def _build_spec(scenarios, policies, predictors=(None,), seeds=(SEED,),
+                until=None, machine="des", n_sm=None,
+                time_scale=None) -> SweepSpec:
+    scenarios = tuple(_subset(s) for s in scenarios)
+    kwargs = {}
+    if n_sm is not None:
+        kwargs["n_sm"] = n_sm
+    if time_scale is not None:
+        kwargs["time_scale"] = time_scale
+    return SweepSpec(scenarios=scenarios, policies=tuple(policies),
+                     predictors=tuple(predictors), seeds=tuple(seeds),
+                     until=until, machine=machine, **kwargs)
+
+
 def sweep(scenarios, policies, predictors=(None,), seeds=(SEED,),
           until=None, machine="des", n_sm=None,
           time_scale=None) -> SweepResult:
@@ -128,16 +143,18 @@ def sweep(scenarios, policies, predictors=(None,), seeds=(SEED,),
     executor (``n_sm`` is then the lane count); see
     :mod:`repro.core.sweep`.
     """
-    scenarios = tuple(_subset(s) for s in scenarios)
-    kwargs = {}
-    if n_sm is not None:
-        kwargs["n_sm"] = n_sm
-    if time_scale is not None:
-        kwargs["time_scale"] = time_scale
-    spec = SweepSpec(scenarios=scenarios, policies=tuple(policies),
-                     predictors=tuple(predictors), seeds=tuple(seeds),
-                     until=until, machine=machine, **kwargs)
+    spec = _build_spec(scenarios, policies, predictors=predictors,
+                       seeds=seeds, until=until, machine=machine,
+                       n_sm=n_sm, time_scale=time_scale)
     return run_sweep(spec, jobs=JOBS, cache_dir=CACHE_DIR)
+
+
+def sweeps(grids) -> List[SweepResult]:
+    """Run several sweep grids as ONE batch (single worker pool, in-flight
+    cross-grid dedup — see :func:`repro.core.sweep.run_sweeps`).  Each
+    grid is a dict of :func:`sweep` keyword arguments."""
+    specs = [_build_spec(**grid) for grid in grids]
+    return run_sweeps(specs, jobs=JOBS, cache_dir=CACHE_DIR)
 
 
 @functools.lru_cache(maxsize=None)
@@ -180,12 +197,42 @@ TABLE5_POLICIES = ("fifo", "mpmax", "srtf", "srtf-adaptive", "sjf")
 TABLE5_SWEEP_POLICIES = TABLE5_POLICIES + ("srtf-zero", "ljf")
 
 
-@functools.lru_cache(maxsize=None)
+#: Memo shared by the Table-5 accessors; :func:`table5_batch` pre-fills
+#: both entries from ONE pooled run (single straggler tail, the seed-0
+#: FIFO/SRTF cells deduped in flight instead of through the disk cache).
+_TABLE5_MEMO: Dict[tuple, SweepResult] = {}
+
+
+def _table5_grid(seed: int) -> dict:
+    return {"scenarios": (PairStagger(seed=seed),),
+            "policies": TABLE5_SWEEP_POLICIES, "seeds": (seed,)}
+
+
+def _table5_ci_grid(seeds: Tuple[int, ...]) -> dict:
+    return {"scenarios": (PairStagger(seed=SEED),),
+            "policies": TABLE5_CI_POLICIES, "seeds": seeds}
+
+
+def table5_batch(seed: int = SEED) -> Tuple[SweepResult, SweepResult]:
+    """The main Table-5 grid and its multi-seed CI companion, executed as
+    one sweep batch (used by the table5 benchmark, which needs both)."""
+    main_key = ("main", seed)
+    ci_key = ("ci", TABLE5_CI_SEEDS)
+    if main_key not in _TABLE5_MEMO or ci_key not in _TABLE5_MEMO:
+        main, ci = sweeps([_table5_grid(seed),
+                           _table5_ci_grid(TABLE5_CI_SEEDS)])
+        _TABLE5_MEMO[main_key] = main
+        _TABLE5_MEMO[ci_key] = ci
+    return _TABLE5_MEMO[main_key], _TABLE5_MEMO[ci_key]
+
+
 def table5_result(seed: int = SEED) -> SweepResult:
     """The full Table-5 grid as one sweep: 56 pair-stagger workloads x all
     policies (incl. the zero-sampling SRTF variant and LJF for Fig. 1)."""
-    return sweep((PairStagger(seed=seed),), TABLE5_SWEEP_POLICIES,
-                 seeds=(seed,))
+    key = ("main", seed)
+    if key not in _TABLE5_MEMO:
+        _TABLE5_MEMO[key] = sweep(**_table5_grid(seed))
+    return _TABLE5_MEMO[key]
 
 
 def table5_sweep(seed: int = SEED) -> Dict[str, List[Tuple[str, WorkloadMetrics]]]:
@@ -211,12 +258,15 @@ TABLE5_CI_SEEDS = (0, 1, 2)
 TABLE5_CI_POLICIES = ("fifo", "srtf")
 
 
-@functools.lru_cache(maxsize=None)
 def table5_ci_result(seeds: Tuple[int, ...] = TABLE5_CI_SEEDS) -> SweepResult:
     """The Table-5 grid swept across noise seeds (for ``summary_ci``);
-    seed-0 FIFO/SRTF cells are shared with :func:`table5_result` through
-    the content-addressed cache."""
-    return sweep((PairStagger(seed=SEED),), TABLE5_CI_POLICIES, seeds=seeds)
+    seed-0 FIFO/SRTF cells are shared with :func:`table5_result` — in
+    flight when both run as one batch, through the content-addressed
+    cache otherwise."""
+    key = ("ci", seeds)
+    if key not in _TABLE5_MEMO:
+        _TABLE5_MEMO[key] = sweep(**_table5_ci_grid(seeds))
+    return _TABLE5_MEMO[key]
 
 
 def linear_fit_end_prediction(end_times: np.ndarray) -> float:

@@ -1,0 +1,242 @@
+"""Persistent DES perf-benchmark lane (DESIGN.md Section 8).
+
+Measures the discrete-event simulator's hot-path throughput (blocks/sec)
+and the cold/warm wall time of the flagship sweep on standardized
+workloads, and writes ``BENCH_des.json`` at the repo root::
+
+    {"commit": "<git sha>", "created": ..., "smoke": false,
+     "baseline": {...pre-PR reference measurements...},
+     "rows": [{"name": ..., ...}, ...]}
+
+Workloads (full mode):
+
+* ``table5`` — the paper's flagship grid (56 pair-stagger workloads x all
+  Table-5 policies + the multi-seed CI rows), run exactly as
+  ``python -m benchmarks.run table5 --jobs 4`` runs it: one cold pass
+  against a fresh cache directory and one warm rerun against the same
+  directory.  This is the wall-time lane every perf PR reports against.
+* ``blocks_per_sec.*`` — single-process simulator throughput on three
+  shapes: a heavy ERCBench pair (SHA1+SAD), a 10x-scaled four-program
+  mix, and a near-saturation closed-loop M/G/k cell.
+
+``--smoke`` keeps the lane shape but shrinks every workload (CI runs it
+per push and uploads the JSON as an artifact, so the perf trajectory
+accumulates).  The ``baseline`` block pins the measurements taken at the
+pre-fast-path commit with this same protocol on this container — the
+reference every later ``make bench`` compares against.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.perf [--smoke] [--jobs 4]
+        [--out BENCH_des.json] [--repeat 2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.policies import make_policy
+from repro.core.scenarios import MGkClosed, NProgramMix
+from repro.core.simulator import Simulator, simulate, solo_runtime
+from repro.core.sweep import SweepSpec, run_sweep
+from repro.core.workload import ERCBENCH, Arrival, scaled_spec
+
+#: Reference measurements from the pre-fast-path commit (8244267), taken
+#: on this container with the exact protocol below, interleaved with the
+#: post-change runs (same CPU-contention regime; the shared-CPU container
+#: fluctuates +/-30%, so pre and post were alternated and the best —
+#: least-contended — observation of each series is recorded, 20 cold runs
+#: pre-side).  ``make bench`` rows are compared against these.
+BASELINE = {
+    "commit": "8244267",
+    "protocol": ("20 cold runs of the pre-fast-path commit interleaved "
+                 "with post-change runs; median and best (least-contended) "
+                 "observations recorded"),
+    "table5.cold.jobs4.wall_s.median": 56.2,
+    "table5.cold.jobs4.wall_s.best": 48.9,
+    "table5.warm.jobs4.wall_s.median": 1.49,
+    "table5.warm.jobs4.wall_s.best": 1.44,
+    "blocks_per_sec.table5_pair": 17_947.0,
+    "blocks_per_sec.mix4_10x": 31_304.0,
+    "blocks_per_sec.mgk_saturated": 4_267.0,
+}
+
+
+def _git_commit() -> str:
+    root = Path(__file__).resolve().parent.parent
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+            cwd=root).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, check=True,
+            cwd=root).stdout.strip()
+        # A dirty tree's rows must not be attributed to the commit alone —
+        # the trajectory would claim HEAD produced numbers it didn't.
+        return f"{sha}-dirty" if dirty else sha
+    except Exception:
+        return "unknown"
+
+
+def _blocks(sim: Simulator) -> int:
+    return sum(run.done for run in sim.runs.values())
+
+
+def _throughput(label: str, build, repeat: int) -> dict:
+    """Best-of-``repeat`` blocks/sec for one simulation builder."""
+    best = None
+    blocks = 0
+    for _ in range(repeat):
+        sim, until = build()
+        t0 = time.perf_counter()
+        sim.run(until=until)
+        dt = time.perf_counter() - t0
+        blocks = _blocks(sim)
+        rate = blocks / dt if dt > 0 else float("inf")
+        if best is None or rate > best:
+            best = rate
+    return {"name": f"blocks_per_sec.{label}", "blocks": blocks,
+            "blocks_per_sec": round(best, 1)}
+
+
+def _throughput_rows(smoke: bool, repeat: int) -> list:
+    scale = 1 if smoke else 10
+    solos = {name: solo_runtime(spec, lambda: make_policy("fifo"))
+             for name, spec in ERCBENCH.items()}
+
+    def pair():
+        names = ("JPEG-d", "SAD") if smoke else ("SHA1", "SAD")
+        arrivals = [Arrival(ERCBENCH[names[0]], 0.0, uid=f"{names[0]}#0"),
+                    Arrival(ERCBENCH[names[1]], 100.0, uid=f"{names[1]}#1")]
+        return Simulator(arrivals, make_policy("srtf-adaptive"),
+                         oracle_runtimes=solos), None
+
+    #: 10x-scaled four-program mix: the Section-6-scale shape the ISSUE's
+    #: load-curve story needs (each spec's grid is 10x the Table-2 one).
+    big = {n: scaled_spec(s, num_blocks=s.num_blocks * scale)
+           for n, s in ERCBENCH.items() if n != "SHA1"}
+
+    def mix():
+        scn = NProgramMix(seed=0, names=sorted(big), specs=big,
+                          n_programs=4, n_workloads=1)
+        (_, arrivals), = scn.workloads()
+        return Simulator(arrivals, make_policy("srtf"),
+                         oracle_runtimes=solos), None
+
+    def mgk():
+        scn = MGkClosed(seed=0, n_total=(8 if smoke else 60),
+                        mean_interarrival=20_000.0, population=8)
+        sim = Simulator([], make_policy("srtf-adaptive"),
+                        oracle_runtimes=solos)
+        sim.attach_arrival_source(scn.make_process(scn.process_names()[0]))
+        return sim, None
+
+    return [
+        _throughput("table5_pair", pair, repeat),
+        _throughput("mix4_10x" if not smoke else "mix4", mix, repeat),
+        _throughput("mgk_saturated", mgk, repeat),
+    ]
+
+
+def _sweep_rows(smoke: bool, jobs: int, repeat: int) -> list:
+    """Cold + warm wall time of the flagship table5 sweep, exactly as the
+    benchmark driver runs it (``benchmarks.run table5 --jobs N``).
+
+    Each phase is measured ``repeat`` times and the best run is recorded
+    (the container's CPU allocation fluctuates; the least-contended
+    observation is the comparable one — the baseline uses the same rule).
+    A cold pass always starts from a fresh cache directory.
+    """
+    rows = []
+    env_root = Path(__file__).resolve().parent.parent
+
+    def one_pass(cache_dir: Path) -> float:
+        argv = [sys.executable, "-m", "benchmarks.run", "table5",
+                "--jobs", str(jobs), "--cache-dir", str(cache_dir)]
+        if smoke:
+            argv += ["--subset", "4"]
+        t0 = time.perf_counter()
+        subprocess.run(argv, check=True, cwd=env_root,
+                       stdout=subprocess.DEVNULL)
+        return time.perf_counter() - t0
+
+    cold = warm = None
+    warm_dir = None
+    try:
+        for _ in range(repeat):
+            cache_dir = Path(tempfile.mkdtemp(prefix="bench_des_"))
+            wall = one_pass(cache_dir)
+            if cold is None or wall < cold:
+                cold = wall
+            if warm_dir is not None:
+                shutil.rmtree(warm_dir, ignore_errors=True)
+            warm_dir = cache_dir
+        for _ in range(repeat):
+            wall = one_pass(warm_dir)
+            if warm is None or wall < warm:
+                warm = wall
+    finally:
+        if warm_dir is not None:
+            shutil.rmtree(warm_dir, ignore_errors=True)
+    for phase, wall in (("cold", cold), ("warm", warm)):
+        row = {"name": f"table5.{phase}.jobs{jobs}",
+               "wall_s": round(wall, 2), "best_of": repeat}
+        if not smoke:
+            median = BASELINE.get(f"table5.{phase}.jobs{jobs}.wall_s.median")
+            best = BASELINE.get(f"table5.{phase}.jobs{jobs}.wall_s.best")
+            if median is not None:
+                row["pre_pr_wall_s_median"] = median
+                row["speedup_vs_pre_pr_median"] = round(median / wall, 2)
+            if best is not None:
+                row["pre_pr_wall_s_best"] = best
+                row["speedup_vs_pre_pr_best"] = round(best / wall, 2)
+        rows.append(row)
+    return rows
+
+
+def run(smoke: bool = False, jobs: int = 4, repeat: int = 2,
+        out: Path = Path("BENCH_des.json")) -> dict:
+    rows = _throughput_rows(smoke, repeat)
+    rows += _sweep_rows(smoke, jobs, repeat)
+    payload = {
+        "commit": _git_commit(),
+        "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "smoke": smoke,
+        "baseline": dict(BASELINE),
+        "rows": rows,
+    }
+    out.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workloads (CI tier)")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--repeat", type=int, default=2,
+                    help="best-of-N for the throughput rows")
+    ap.add_argument("--out", default="BENCH_des.json")
+    args = ap.parse_args()
+    if args.repeat < 1:
+        ap.error("--repeat must be >= 1")
+    if args.jobs < 1:
+        ap.error("--jobs must be >= 1")
+    payload = run(smoke=args.smoke, jobs=args.jobs, repeat=args.repeat,
+                  out=Path(args.out))
+    for row in payload["rows"]:
+        print(json.dumps(row, sort_keys=True))
+    print(f"wrote {args.out} @ {payload['commit']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,18 +16,17 @@ from .common import (
     TABLE5_POLICIES,
     metric_ci_row,
     metric_row,
-    table5_ci_result,
+    table5_batch,
     table5_summary,
 )
 
 
 def run():
+    # One pooled batch computes the main grid and the CI grid together
+    # (single worker-pool tail; the shared seed-0 cells dedup in flight).
+    _, ci_result = table5_batch()
     s = table5_summary()
     rows = [metric_row(f"table5.{pol}", s[pol]) for pol in TABLE5_POLICIES]
-
-    # Multi-seed spread (ROADMAP): the same grid re-simulated under
-    # independent noise seeds; geomean with the min..max band per policy.
-    ci_result = table5_ci_result()
     for pol in TABLE5_CI_POLICIES:
         rows.append(metric_ci_row(f"table5.ci.{pol}",
                                   ci_result.summary_ci(policy=pol)))

@@ -189,6 +189,7 @@ class LaneExecutor(MachineBase):
         arrival = max(self.now, job.arrival)
         self.jobs[key] = job
         self.runs[key] = KernelRun(key, job.grid_spec(), arrival, order)
+        self._invalidate_active()
         if warmup and job.warmup_fn is not None:
             job.warmup_fn()
         heapq.heappush(self._events,
@@ -218,6 +219,7 @@ class LaneExecutor(MachineBase):
             return False
         run.cancelled = True
         run.finish_time = self.now
+        self._invalidate_active(ended=key)
         self.results[key] = JobResult(
             key, run.arrival_time, self.now, run.done,
             self.failures_absorbed, cancelled=True)

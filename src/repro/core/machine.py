@@ -42,9 +42,16 @@ engineering claim.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Protocol, Union, runtime_checkable
-
-import numpy as np
+from typing import (
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Union,
+    runtime_checkable,
+)
 
 from .events import (
     ArrivalSource,
@@ -59,9 +66,13 @@ from .predictor import Predictor, make_predictor
 from .workload import Arrival, KernelSpec
 
 
-@dataclass
+@dataclass(slots=True)
 class KernelRun:
-    """Dynamic state of one kernel instance on a machine."""
+    """Dynamic state of one kernel instance on a machine.
+
+    Slotted: machines read these fields in their innermost loops, and the
+    attribute set IS the run-level read surface — ad-hoc extra attributes
+    would bypass the protocol anyway."""
 
     key: str
     spec: KernelSpec
@@ -77,11 +88,20 @@ class KernelRun:
     #: timestamp has passed (two arrivals can share one instant; the second
     #: must not be dispatched before its own launch is processed).
     launched: bool = False
-    issued_per_sm: Dict[int, int] = field(default_factory=dict)
-    resident_per_sm: Dict[int, int] = field(default_factory=dict)
-    issue_gate: Dict[int, float] = field(default_factory=dict)
-    stagger_sm: Dict[int, bool] = field(default_factory=dict)
-    noise: Optional[np.ndarray] = None
+    #: Per-SM occupancy maps.  Dicts by default (sparse machines); a
+    #: machine with dense per-unit state may normalize them to flat
+    #: index-addressed lists (the DES does, at RNG init).
+    issued_per_sm: Union[Dict[int, int], List[int]] = \
+        field(default_factory=dict)
+    resident_per_sm: Union[Dict[int, int], List[int]] = \
+        field(default_factory=dict)
+    issue_gate: Union[Dict[int, float], List[float]] = \
+        field(default_factory=dict)
+    stagger_sm: Union[Dict[int, bool], List[bool]] = \
+        field(default_factory=dict)
+    #: Per-block duration noise factors, indexed by global block number
+    #: (a plain float list: the DES issue loop reads one entry per block).
+    noise: Optional[Sequence[float]] = None
 
     @property
     def finished(self) -> bool:
@@ -92,7 +112,10 @@ class KernelRun:
         return self.spec.num_blocks - self.issued
 
     def resident(self, sm: int) -> int:
-        return self.resident_per_sm.get(sm, 0)
+        per = self.resident_per_sm
+        if isinstance(per, dict):
+            return per.get(sm, 0)
+        return per[sm]     # machines may normalize the map to a flat list
 
 
 @runtime_checkable
@@ -132,6 +155,13 @@ class Machine(Protocol):
         """True solo runtime, if an oracle provided one (SJF/LJF/zero)."""
         ...
 
+    def arrivals_pending(self) -> bool:
+        """Whether any not-yet-launched kernel may still arrive (queued
+        arrivals, closed-loop sources, external job intake).  Policies may
+        use this to elide bookkeeping that only matters under future
+        multiprogramming; machines that cannot know must answer True."""
+        ...
+
     def sync_residency_caps(self) -> None:
         """Re-propagate policy residency caps into the predictor
         (Section 3.4.3: residency changes start a new slice)."""
@@ -146,6 +176,14 @@ class SchedulerCore:
     * :meth:`post` — feed a typed event; the core updates the predictor
       (Algorithm 1) and the policy hooks in the paper's order and returns
       the predictor's fresh Eq. 2 estimate for ``BlockEnded`` events.
+    * :meth:`post_block_start` / :meth:`post_block_end` — **fused fast
+      paths** for the two block-granular events, which dominate every run
+      (two per executed block).  They perform the exact dispatch the typed
+      branches of :meth:`post` perform, minus the per-block event-object
+      allocation and the ``isinstance`` chain; the typed surface stays as
+      the protocol seam for custom machines and for the rarer lifecycle
+      events (and the fault path, which needs ``lost=True``).  A
+      conformance test pins both paths to identical predictor/policy state.
     * :meth:`decide` — ask for a typed :class:`~repro.core.events.Decision`
       for one execution unit.
     * :meth:`residency_cap` — the policy's current per-(kernel, unit) cap.
@@ -156,11 +194,37 @@ class SchedulerCore:
         self.policy = policy
         self.predictor = make_predictor(predictor, n_sm)
         self.machine: Optional[Machine] = None
+        self._invalidate_active: Optional[Callable[..., None]] = None
 
     def bind(self, machine: Machine) -> "SchedulerCore":
         self.machine = machine
         self.policy.bind(machine)
+        # Bound-method bindings for the per-block fast paths (skip the
+        # attribute walks in the hot loop), plus the machine's active-set
+        # invalidation hook, if it has one (MachineBase does; a custom
+        # protocol-only machine may not cache and needs no notification).
+        self._predictor_on_block_start = self.predictor.on_block_start
+        self._predictor_on_block_end = self.predictor.on_block_end
+        self._policy_on_block_end = self.policy.on_block_end
+        self._invalidate_active = getattr(machine, "_invalidate_active", None)
         return self
+
+    # -- fused per-block fast paths -----------------------------------------
+    def post_block_start(self, key: str, sm: int, slot: int,
+                         time: float) -> None:
+        """Fused ``BlockStarted`` dispatch (no event object, no isinstance)."""
+        self._predictor_on_block_start(key, sm, slot, time)
+
+    def post_block_end(self, key: str, sm: int, slot: int,
+                       time: float) -> Optional[float]:
+        """Fused ``BlockEnded`` dispatch; returns the fresh Eq. 2 estimate.
+
+        Lost blocks (the executor's fault path) must go through the typed
+        :meth:`post` with ``lost=True`` — this path is the common case only.
+        """
+        pred = self._predictor_on_block_end(key, sm, slot, time)
+        self._policy_on_block_end(key, sm)
+        return pred
 
     def post(self, event: MachineEvent) -> Optional[float]:
         # Dispatch order: block events first — they dominate (two per
@@ -181,11 +245,15 @@ class SchedulerCore:
         elif isinstance(event, KernelArrived):
             run = self.machine.run_state(event.key)
             run.launched = True
+            if self._invalidate_active is not None:
+                self._invalidate_active()
             self.predictor.on_launch(
                 event.key, run.spec.num_blocks, run.spec.max_residency)
             self.policy.on_arrival(event.key)
             self.machine.sync_residency_caps()
         elif isinstance(event, KernelEnded):
+            if self._invalidate_active is not None:
+                self._invalidate_active(ended=event.key)
             self.predictor.on_kernel_end(event.key)
             self.policy.on_kernel_end(event.key)
             self.machine.sync_residency_caps()
@@ -220,7 +288,23 @@ class MachineBase:
         self.runs: Dict[str, KernelRun] = {}
         self.oracle_runtimes: Dict[str, float] = dict(oracle_runtimes or {})
         self.core = SchedulerCore(policy, predictor, n_sm)
+        #: Fast-path master switch (DESIGN.md Section 8).  Every fast path
+        #: is bit-identical to the reference path by construction; the
+        #: switch exists so the equivalence matrix suite can force the
+        #: reference behavior and diff the two end to end.
+        self.fast_path = True
         self._key_order: Optional[List[str]] = None  # active_keys() cache
+        #: Event-driven active_keys() cache: the filtered list is reused
+        #: until an arrival/kernel-end/injection dirties it (see
+        #: :meth:`_invalidate_active`).
+        self._active_cache: Optional[List[str]] = None
+        #: Parallel cache of the KernelRun objects behind active_keys()
+        #: (machine-internal: saves the per-key dict hop in hot loops).
+        self._active_runs_cache: Optional[List[KernelRun]] = None
+        #: Last residency cap pushed into the predictor per kernel
+        #: (uniform-cap policies only): lets :meth:`sync_residency_caps`
+        #: skip the per-SM fan-out when nothing changed.
+        self._synced_caps: Dict[str, int] = {}
         #: Closed-loop feedback edge (None = open loop, the default).
         self._arrival_source: Optional[ArrivalSource] = None
         #: Machine seconds per source time unit (1.0 on the cycle-clocked
@@ -237,11 +321,20 @@ class MachineBase:
         """Arrived (launch event processed), unfinished kernels in arrival
         order.
 
-        Hot path (policies call this on every decision): the order-sorted
-        key list is cached and rebuilt only when the run set changes size
-        (dynamic arrivals on the executor); the launched/finished filter
-        stays per-call.
+        Hot path (policies call this on every decision): with
+        :attr:`fast_path` on, the *filtered* list is cached under an
+        event-driven dirty bit — rebuilt only after an arrival, a kernel
+        end, or an injected run (:meth:`_invalidate_active`), since those
+        are the only transitions of the launched/finished predicates.  The
+        returned list is shared; callers must treat it as read-only (the
+        protocol's convention for everything this surface exposes).  With
+        :attr:`fast_path` off the launched/finished filter runs per call
+        (the reference behavior).
         """
+        if self.fast_path:
+            cache = self._active_cache
+            if cache is not None:
+                return cache
         order = self._key_order
         if order is None or len(order) != len(self.runs):
             runs = self.runs
@@ -253,7 +346,28 @@ class MachineBase:
             r = runs[k]
             if r.launched and r.finish_time is None:
                 out.append(k)
+        if self.fast_path:
+            self._active_cache = out
         return out
+
+    def _invalidate_active(self, ended: Optional[str] = None) -> None:
+        """Dirty the :meth:`active_keys` cache (and drop the ended
+        kernel's synced-cap memo).  Called by :class:`SchedulerCore` on
+        arrival/kernel-end dispatch and by machines when they add runs."""
+        self._active_cache = None
+        self._active_runs_cache = None
+        if ended is not None:
+            self._synced_caps.pop(ended, None)
+
+    def _active_runs(self) -> List[KernelRun]:
+        """Machine-internal: the runs behind :meth:`active_keys`, cached
+        under the same dirty bit (not part of the policy read surface)."""
+        cache = self._active_runs_cache
+        if cache is None:
+            runs = self.runs
+            cache = [runs[k] for k in self.active_keys()]
+            self._active_runs_cache = cache
+        return cache
 
     def run_state(self, key: str) -> KernelRun:
         return self.runs[key]
@@ -263,10 +377,15 @@ class MachineBase:
 
     def can_fit(self, key: str, sm: int) -> bool:
         run = self.runs[key]
-        if run.unissued <= 0:
+        spec = run.spec
+        if spec.num_blocks - run.issued <= 0:
             return False
-        cap = min(run.spec.max_residency,
-                  self.core.policy.residency_cap(key, sm))
+        cap = spec.max_residency
+        policy = self.core.policy
+        if not policy.unlimited_caps:
+            pcap = policy.residency_cap(key, sm)
+            if pcap < cap:
+                cap = pcap
         if self._cap_residency(key, sm) >= cap:
             return False
         return self._fits_resources(key, sm)
@@ -277,9 +396,41 @@ class MachineBase:
     def oracle_runtime(self, key: str) -> Optional[float]:
         return self.oracle_runtimes.get(self.runs[key].spec.name)
 
+    def arrivals_pending(self) -> bool:
+        # Conservative default: machines with external intake (the
+        # executor's add_job, the async service) can gain kernels at any
+        # time, so "more arrivals possible" is the safe answer.
+        return True
+
     def sync_residency_caps(self) -> None:
+        policy = self.core.policy
+        predictor = self.predictor
+        if self.fast_path and policy.uniform_caps:
+            # Delta sync: built-in policies cap per kernel, not per unit
+            # (``Policy.uniform_caps``), so one cap query covers all SMs
+            # and the per-(key, sm) predictor fan-out only runs for keys
+            # whose cap actually changed since the last sync.  The memo
+            # mirrors predictor state exactly — every cap the predictor
+            # holds was pushed through this method — so a memo hit is a
+            # provable no-op fan-out.
+            synced = self._synced_caps
+            for key in self.active_keys():
+                if not predictor.has_kernel(key):
+                    continue
+                run = self.runs[key]
+                cap = run.spec.max_residency
+                if not policy.unlimited_caps:
+                    pcap = policy.residency_cap(key, 0)
+                    if pcap < cap:
+                        cap = pcap
+                if synced.get(key) == cap:
+                    continue
+                for sm in range(self.n_sm):
+                    predictor.on_residency_change(key, sm, cap)
+                synced[key] = cap
+            return
         for key in self.active_keys():
-            if not self.predictor.has_kernel(key):
+            if not predictor.has_kernel(key):
                 # Defensive invariant: active_keys() only returns launched
                 # runs, and SchedulerCore.post registers a run with the
                 # predictor in the same KernelArrived dispatch that marks
@@ -291,7 +442,7 @@ class MachineBase:
             for sm in range(self.n_sm):
                 cap = min(run.spec.max_residency,
                           self.core.residency_cap(key, sm))
-                self.predictor.on_residency_change(key, sm, cap)
+                predictor.on_residency_change(key, sm, cap)
 
     # -- closed-loop feedback edge ------------------------------------------
     def attach_arrival_source(self, source: ArrivalSource,

@@ -212,7 +212,31 @@ class SimpleSlicingPredictor(Predictor):
 
     def __init__(self, n_sm: int):
         super().__init__(n_sm)
-        self._state: Dict[str, Dict[int, PerSMState]] = {}
+        # Whether _observe must see every measured duration.  Simple
+        # Slicing only consumes the first duration of a new slice, so the
+        # per-block handler skips the call mid-slice — but ONLY when
+        # _observe is the base implementation: any subclass overriding the
+        # seam (EWMA, future estimators) is detected here and fed every
+        # block, so the optimization can never starve a custom estimator.
+        self._observe_every_block = (
+            type(self)._observe is not SimpleSlicingPredictor._observe)
+        # Per-kernel per-SM Table-1 state, index-addressed: SM ids are
+        # dense 0..n_sm-1 on every machine, so a flat list beats a dict in
+        # the per-block handlers (state() keeps the lookup API).
+        self._state: Dict[str, List[PerSMState]] = {}
+        # Version-counter memo for the machine-level remaining estimate:
+        # ``gpu_remaining(k)`` is pure over per-(k, sm) state, and that
+        # state only changes through the handlers below — each bumps the
+        # kernel's version, so an unchanged version returns the memoized
+        # float (bit-identical by definition).  SRTF/Adaptive call
+        # ``gpu_remaining`` for every active kernel on every block end;
+        # most of those calls land between mutations of *other* kernels.
+        self._rem_version: Dict[str, int] = {}
+        self._rem_memo: Dict[str, tuple] = {}
+
+    def _touch(self, kernel: str) -> None:
+        """Invalidate memoized estimates for ``kernel`` (state changed)."""
+        self._rem_version[kernel] = self._rem_version.get(kernel, 0) + 1
 
     # ------------------------------------------------------------------ state
     def state(self, kernel: str, sm: int) -> PerSMState:
@@ -223,6 +247,8 @@ class SimpleSlicingPredictor(Predictor):
 
     def drop_kernel(self, kernel: str) -> None:
         self._state.pop(kernel, None)
+        self._rem_version.pop(kernel, None)
+        self._rem_memo.pop(kernel, None)
 
     def kernels(self) -> List[str]:
         return list(self._state)
@@ -240,21 +266,23 @@ class SimpleSlicingPredictor(Predictor):
     # ------------------------------------------------------- Algorithm 1 ----
     def on_launch(self, kernel: str, total_blocks: int, residency: int) -> None:
         """ONLAUNCH: initialise per-SM counters for a newly launched kernel."""
-        per_sm = {}
         expected = math.ceil(total_blocks / self.n_sm)
-        for sm in range(self.n_sm):
-            per_sm[sm] = PerSMState(
-                total_blocks=expected,
-                resident_blocks=max(1, residency),
-                reslice=True,
-            )
+        residency = max(1, residency)
+        per_sm = [
+            PerSMState(total_blocks=expected, resident_blocks=residency,
+                       reslice=True)
+            for _ in range(self.n_sm)
+        ]
         self._state[kernel] = per_sm
+        self._touch(kernel)
         # A launch starts a new slice for every *other* running kernel too
         # (slice boundaries are kernel launches and endings, Section 4).
+        # (Reslicing alone does not move any ``t``/``done`` state, so the
+        # other kernels' remaining-estimate memos stay valid.)
         for other, states in self._state.items():
             if other == kernel:
                 continue
-            for st in states.values():
+            for st in states:
                 st.reslice = True
 
     def on_kernel_end(self, kernel: str) -> None:
@@ -262,11 +290,11 @@ class SimpleSlicingPredictor(Predictor):
         for other, states in self._state.items():
             if other == kernel:
                 continue
-            for st in states.values():
+            for st in states:
                 st.reslice = True
 
     def on_block_start(self, kernel: str, sm: int, blkindex: int, now: float) -> None:
-        st = self.state(kernel, sm)
+        st = self._state[kernel][sm]
         st.block_start[blkindex] = now
         st.blocks_started += 1
         if st.running_count == 0:
@@ -274,15 +302,39 @@ class SimpleSlicingPredictor(Predictor):
         st.running_count += 1
 
     def on_block_end(self, kernel: str, sm: int, blkindex: int, now: float) -> Optional[float]:
-        """ONBLOCKEND + Eq. 2.  Returns the new Pred_Cycles for (kernel, sm)."""
-        st = self.state(kernel, sm)
+        """ONBLOCKEND + Eq. 2.  Returns the new Pred_Cycles for (kernel, sm).
+
+        The Eq. 2 projection is inlined (same arithmetic as
+        :meth:`predict`): this handler runs once per executed block on the
+        whole machine.
+        """
+        st = self._state[kernel][sm]
         st.done_blocks += 1
         start = st.block_start.pop(blkindex, None)
-        self._observe(st, None if start is None else now - start)
-        st.running_count = max(0, st.running_count - 1)
-        if st.running_count == 0:
+        if st.reslice or st.t is None or self._observe_every_block:
+            # Mid-slice Simple Slicing ignores the duration entirely (the
+            # `_observe` precondition) — skip the call; estimators that
+            # fold every duration set `_observe_every_block`.
+            self._observe(st, None if start is None else now - start)
+        rc = st.running_count - 1
+        st.running_count = rc if rc > 0 else 0
+        if rc <= 0:
             st.active_cycles += now - st.running_since
-        return self.predict(kernel, sm, now)
+        rv = self._rem_version                     # inlined _touch()
+        rv[kernel] = rv.get(kernel, 0) + 1
+        t = st.t
+        if t is None:
+            return None
+        remaining_blocks = st.total_blocks - st.done_blocks
+        if remaining_blocks < 0:
+            remaining_blocks = 0
+        res = st.resident_blocks
+        remaining = (remaining_blocks / (res if res > 1 else 1)) * t
+        active = st.active_cycles
+        if st.running_count > 0:
+            active += now - st.running_since
+        st.pred_cycles = active + remaining
+        return st.pred_cycles
 
     def _observe(self, st: PerSMState, duration: Optional[float]) -> None:
         """Fold one measured block duration into the ``t`` estimate.
@@ -305,23 +357,25 @@ class SimpleSlicingPredictor(Predictor):
         if st.resident_blocks != new_residency:
             st.resident_blocks = new_residency
             st.reslice = True
+            self._touch(kernel)
 
     def reslice_all(self, kernel: Optional[str] = None) -> None:
         """Force a new slice (e.g. co-runner set changed, Section 3.4.4)."""
         targets = [kernel] if kernel is not None else list(self._state)
         for k in targets:
-            for st in self._state.get(k, {}).values():
+            for st in self._state.get(k, ()):
                 st.reslice = True
 
     def broadcast_t(self, kernel: str, t: float, from_sm: int) -> None:
         """SRTF sampling (Section 5.1.1): copy the sample SM's ``t`` to the
         other SMs as their initial estimate."""
-        for sm, st in self._state.get(kernel, {}).items():
+        for sm, st in enumerate(self._state.get(kernel, ())):
             if sm == from_sm:
                 continue
             if st.t is None:
                 st.t = t
                 st.reslice = False
+        self._touch(kernel)
 
     # ------------------------------------------------------- predictions ----
     def predict(self, kernel: str, sm: int, now: float) -> Optional[float]:
@@ -359,8 +413,12 @@ class SimpleSlicingPredictor(Predictor):
         states = self._state.get(kernel)
         if states is None:
             return None
+        version = self._rem_version.get(kernel, 0)
+        memo = self._rem_memo.get(kernel)
+        if memo is not None and memo[0] == version:
+            return memo[1]
         vals = []
-        for st in states.values():
+        for st in states:
             if st.t is None:
                 continue
             remaining_blocks = st.total_blocks - st.done_blocks
@@ -368,31 +426,34 @@ class SimpleSlicingPredictor(Predictor):
                 remaining_blocks = 0
             res = st.resident_blocks
             vals.append((remaining_blocks / (res if res > 1 else 1)) * st.t)
-        if not vals:
-            return None
-        return sum(vals) / len(vals)
+        out = (sum(vals) / len(vals)) if vals else None
+        self._rem_memo[kernel] = (version, out)
+        return out
 
     def gpu_predicted_total(self, kernel: str, now: float) -> Optional[float]:
         states = self._state.get(kernel)
         if states is None:
             return None
-        vals = []
-        for st in states.values():
-            if st.t is None:
+        total = 0.0
+        n = 0
+        for st in states:
+            t = st.t
+            if t is None:
                 continue
             remaining_blocks = st.total_blocks - st.done_blocks
             if remaining_blocks < 0:
                 remaining_blocks = 0
             res = st.resident_blocks
-            remaining = (remaining_blocks / (res if res > 1 else 1)) * st.t
+            remaining = (remaining_blocks / (res if res > 1 else 1)) * t
             active = st.active_cycles
             if st.running_count > 0:
                 active += now - st.running_since
             st.pred_cycles = active + remaining
-            vals.append(st.pred_cycles)
-        if not vals:
+            total += st.pred_cycles
+            n += 1
+        if n == 0:
             return None
-        return sum(vals) / len(vals)
+        return total / n
 
 
 # ------------------------------------------------------------ EWMA baseline

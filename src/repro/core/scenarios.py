@@ -286,13 +286,99 @@ class PoissonOpen(Scenario):
         return out
 
 
+def fit_bursty_profile(times: Sequence[float],
+                       threshold: Optional[float] = None) -> Dict[str, float]:
+    """Fit :class:`Bursty` parameters from observed arrival times (the
+    bursty counterpart of :func:`fit_diurnal_profile`).
+
+    Arrivals are split into bursts at gaps larger than ``threshold``.
+    With ``threshold=None`` the split point is found by Otsu's method on
+    the log-gaps (the split maximizing between-class variance): the
+    within-burst and idle gaps are exponentials separated by orders of
+    magnitude, so they form two log-space clusters and the variance
+    criterion finds the valley deterministically.  Fitted values:
+
+    * ``n_bursts`` / ``max_burst`` — observed burst count and largest
+      burst size;
+    * ``within_gap`` — mean intra-burst gap (0.0 when every burst has one
+      arrival — nothing to calibrate);
+    * ``idle_gap`` — mean inter-burst gap *minus* ``within_gap``: the
+      generator draws ``Exp(within_gap) + Exp(idle_gap)`` between bursts,
+      so the observed separation over-counts by one within-draw (clamped
+      at 0; 0.0 when there is a single burst);
+    * ``burst_alpha`` — continuous-Pareto MLE on cell midpoints
+      (``alpha = n / sum(ln(size + 0.5))``; the ``max_burst`` censoring
+      is ignored — adequate for the loose shapes scenarios need);
+    * ``threshold`` — the split actually used.
+
+    Raises :class:`ValueError` on degenerate input (no arrivals, negative
+    times, a non-positive explicit threshold).
+    """
+    times = sorted(float(t) for t in times)
+    if not times:
+        raise ValueError("cannot fit a bursty profile to zero arrivals")
+    if times[0] < 0.0:
+        raise ValueError("negative arrival time in trace")
+    gaps = [b - a for a, b in zip(times, times[1:])]
+    if threshold is None:
+        positive = sorted(g for g in gaps if g > 0.0)
+        if len(positive) >= 2:
+            logs = [math.log(g) for g in positive]
+            # Otsu in one pass over the sorted logs: split after index k
+            # maximizing w0*w1*(mu0-mu1)^2 (between-class variance).
+            total = sum(logs)
+            n = len(logs)
+            acc = 0.0
+            best_score, best_k = -1.0, 0
+            for k in range(n - 1):
+                acc += logs[k]
+                w0 = k + 1
+                w1 = n - w0
+                mu0 = acc / w0
+                mu1 = (total - acc) / w1
+                score = w0 * w1 * (mu0 - mu1) ** 2
+                if score > best_score:
+                    best_score, best_k = score, k
+            threshold = math.sqrt(positive[best_k] * positive[best_k + 1])
+        elif positive:
+            threshold = positive[0]
+        else:
+            threshold = 0.0
+    elif threshold <= 0.0:
+        raise ValueError("threshold must be positive")
+    sizes = [1]
+    intra: List[float] = []
+    inter: List[float] = []
+    for g in gaps:
+        if g <= threshold:
+            sizes[-1] += 1
+            intra.append(g)
+        else:
+            sizes.append(1)
+            inter.append(g)
+    within = sum(intra) / len(intra) if intra else 0.0
+    idle = max(0.0, sum(inter) / len(inter) - within) if inter else 0.0
+    alpha = len(sizes) / sum(math.log(s + 0.5) for s in sizes)
+    return {
+        "n_bursts": len(sizes),
+        "burst_alpha": alpha,
+        "max_burst": max(sizes),
+        "within_gap": within,
+        "idle_gap": idle,
+        "threshold": threshold,
+    }
+
+
 @register_scenario("bursty")
 class Bursty(Scenario):
     """Heavy-tail ON/OFF arrival bursts (bursty DL inference traffic).
 
     Each burst holds ``1 + floor(Pareto(alpha))`` kernels (capped at
     ``max_burst``) spaced ``Exp(within_gap)`` apart; bursts are separated
-    by ``Exp(idle_gap)`` quiet periods.
+    by ``Exp(idle_gap)`` quiet periods.  Use :meth:`from_trace` /
+    :func:`fit_bursty_profile` to calibrate the burst-size and gap
+    parameters from a ``trace-replay`` JSON, the way ``diurnal`` fits its
+    rate profile.
     """
 
     def __init__(self, seed: int = 0,
@@ -312,6 +398,27 @@ class Bursty(Scenario):
         self.within_gap = within_gap
         self.idle_gap = idle_gap
         self.n_workloads = n_workloads
+
+    @classmethod
+    def from_trace(cls, path: Optional[Union[str, Path]] = None,
+                   trace: Optional[Union[list, dict]] = None,
+                   threshold: Optional[float] = None,
+                   **kwargs) -> "Bursty":
+        """Calibrate burst-size/gap parameters from a ``trace-replay``-
+        shaped JSON (first workload's arrival times); see
+        :func:`fit_bursty_profile` for the fit itself."""
+        replay = TraceReplay(path=path, trace=trace,
+                             specs=kwargs.get("specs"))
+        workloads = replay.workloads()
+        if not workloads or not workloads[0][1]:
+            raise ValueError("trace holds no arrivals to calibrate from")
+        profile = fit_bursty_profile(
+            [a.time for a in workloads[0][1]], threshold=threshold)
+        return cls(n_bursts=profile["n_bursts"],
+                   burst_alpha=profile["burst_alpha"],
+                   max_burst=profile["max_burst"],
+                   within_gap=profile["within_gap"],
+                   idle_gap=profile["idle_gap"], **kwargs)
 
     def workloads(self) -> List[Workload]:
         out: List[Workload] = []
@@ -998,6 +1105,7 @@ __all__ = [
     "OPEN_LOOP_MIX",
     "executor_job",
     "executor_workload",
+    "fit_bursty_profile",
     "fit_diurnal_profile",
     "open_loop_names",
     "PairStagger",

@@ -44,9 +44,10 @@ from .events import (
     BlockEnded,
     BlockStarted,
     Decision,
+    IssueGrant,
     KernelArrived,
     KernelEnded,
-    grants_issue,
+    SampleOnSM,
 )
 from .machine import KernelRun, MachineBase
 from .predictor import Predictor
@@ -55,6 +56,7 @@ from .workload import (
     KernelSpec,
     MAX_BLOCK_SLOTS,
     MAX_THREADS_PER_SM,
+    MAX_WARPS_PER_SM,
     N_SM,
 )
 
@@ -112,11 +114,20 @@ class SMState:
     def free(self, slot: int, spec: KernelSpec) -> None:
         del self.resident[slot]
         self.free_slots.append(slot)
-        self.used_threads -= spec.threads_per_block
-        self.used_fraction = max(0.0, self.used_fraction - spec.resource_fraction)
+        # Both pools clamp at zero: the fraction pool accumulates float
+        # rounding, and a mis-specced spec must not drive either negative
+        # (a negative pool would over-admit forever after).
+        ut = self.used_threads - spec.threads_per_block
+        self.used_threads = ut if ut > 0 else 0
+        uf = self.used_fraction - spec.resource_fraction
+        self.used_fraction = uf if uf > 0.0 else 0.0
 
 
 # Event kinds, in tie-break priority order (lower sorts first at equal time).
+# Heap items are flat tuples — (time, kind, seq, payload...) — where seq is
+# unique, so comparison never reaches the payload: arrivals and issue
+# retries carry one scalar (key / sm index), block ends carry
+# (key, sm, slot, start).
 _ARRIVAL, _BLOCK_END, _TRY_ISSUE = 0, 1, 2
 
 
@@ -135,32 +146,82 @@ class Simulator(MachineBase):
         record_decisions: bool = False,
         oracle_runtimes: Optional[Dict[str, float]] = None,
         predictor: Union[str, Predictor, None] = None,
+        fast_path: bool = True,
     ):
         super().__init__(n_sm, policy, predictor=predictor,
                          oracle_runtimes=oracle_runtimes)
+        #: Bit-identical fast paths (DESIGN.md Section 8): fused event
+        #: dispatch, the incremental corunner aggregate, decision
+        #: memoization and the targeted issue fan-out.  ``fast_path=False``
+        #: forces the reference implementations; the equivalence matrix
+        #: suite diffs the two end to end.  ``record_decisions=True``
+        #: keeps the complete ask pattern (no targeted skips, memoization
+        #: still active), so a recorded fast-path log is *identical* to
+        #: the reference log — the memoization cross-check contract.
+        self.fast_path = fast_path
         self.seed = seed
         self.sms = [SMState(i) for i in range(n_sm)]
         #: Resource-weighted busy time: each executing block contributes
         #: duration * spec.resource_fraction (one block = 1/R of an SM), so
         #: utilization = busy_time / (n_sm * window) lands in [0, 1].
         self.busy_time = 0.0
-        self._events: List[Tuple[float, int, int, tuple]] = []
+        self._events: List[tuple] = []   # flat (time, kind, seq, payload...)
         self._seq = itertools.count()
+        #: Scheduler-state era: bumped once per processed event and per
+        #: block allocation — every mutation a Decision may depend on is
+        #: bracketed by a bump, so a memoized per-SM decision is valid
+        #: exactly while the era stands still.
+        self._era = 0
+        self._decision_memo: List[Optional[Tuple[int, Decision]]] = \
+            [None] * n_sm
+        #: (min threads, min fraction) over active kernels with
+        #: undispatched blocks; min threads is -1 when none exist.  The
+        #: cheapest possible "could anything issue here?" test.  Dirtied
+        #: only by the transitions that can change it: arrivals/kernel
+        #: ends (via ``_invalidate_active``) and a kernel's last block
+        #: issuing (in ``_allocate_block``).
+        self._minfoot: Tuple[int, float] = (-1, 0.0)
+        self._minfoot_dirty = True
         self.trace: List[BlockRecord] = [] if record_trace else None
         self.predictions: List[PredictionRecord] = [] if record_predictions else None
         self.decisions: List[Tuple[float, int, Decision]] = \
             [] if record_decisions else None
 
+        #: Queued-but-unprocessed arrival events (for arrivals_pending()).
+        self._pending_arrivals = 0
         for order, arr in enumerate(sorted(arrivals, key=lambda a: a.time)):
             run = KernelRun(arr.key, arr.spec, arr.time, order)
             self._init_kernel_rng(run)
             self.runs[arr.key] = run
-            self._push(arr.time, _ARRIVAL, (arr.key,))
+            self._pending_arrivals += 1
+            self._push(arr.time, _ARRIVAL, arr.key)
         # Dynamic (closed-loop) arrivals continue the same order sequence,
         # so injected kernels draw fresh per-order noise streams.
         self._arrival_order = itertools.count(len(self.runs))
 
         self.core.bind(self)
+        # Bound once: the core never swaps its policy/predictor after
+        # construction (machine.py documents the same invariant for
+        # .policy/.predictor), so the per-block entry points skip the
+        # attribute walks.
+        self._policy_decide = self.core.policy.decide
+        self._policy_on_block_end = self.core.policy.on_block_end
+        self._policy_unlimited = self.core.policy.unlimited_caps
+        #: Direct binding of the predictor's ONBLOCKEND handler: the fast
+        #: block-end path performs SchedulerCore.post_block_end's exact
+        #: dispatch (predictor first, then the policy hook) without the
+        #: wrapper frame; the conformance suite pins the equivalence.
+        self._predictor_on_block_end = self.core.predictor.on_block_end
+        self._post_block_start = self.core.post_block_start
+        #: Whether the per-block Algorithm-1 predictor bookkeeping runs.
+        #: Prediction-free policies (``Policy.uses_predictor`` False) never
+        #: read it, so the fast path elides it entirely — unless
+        #: predictions are being recorded, or the reference path is forced
+        #: (which always drives the full event surface).
+        self._drive_predictor = (
+            not fast_path
+            or record_predictions
+            or getattr(self.core.policy, "uses_predictor", True))
 
     # ------------------------------------------------------------ rng setup
     def _init_kernel_rng(self, run: KernelRun) -> None:
@@ -173,17 +234,27 @@ class Simulator(MachineBase):
         spec = run.spec
         if spec.rsd > 0.0:
             sigma = math.sqrt(math.log(1.0 + spec.rsd * spec.rsd))
+            # Stored as a plain list: the issue loop indexes one factor per
+            # block, and float64 -> float via tolist() is exact.
             run.noise = rng.lognormal(
-                mean=-0.5 * sigma * sigma, sigma=sigma, size=spec.num_blocks)
+                mean=-0.5 * sigma * sigma, sigma=sigma,
+                size=spec.num_blocks).tolist()
         else:
-            run.noise = np.ones(spec.num_blocks)
-        for sm in range(self.n_sm):
-            run.stagger_sm[sm] = (
-                spec.stagger_frac > 0.0 and rng.random() < spec.stagger_sm_prob)
+            run.noise = [1.0] * spec.num_blocks
+        # The per-SM maps are dense on the DES (every SM is a candidate), so
+        # they are normalized to flat index-addressed lists here; the
+        # KernelRun fields default to dicts for machines with sparse
+        # occupancy (the lane executor tracks residency its own way).
+        run.resident_per_sm = [0] * self.n_sm
+        run.issued_per_sm = [0] * self.n_sm
+        run.issue_gate = [0.0] * self.n_sm
+        run.stagger_sm = [
+            spec.stagger_frac > 0.0 and rng.random() < spec.stagger_sm_prob
+            for _ in range(self.n_sm)]
 
     # --------------------------------------------------------------- events
-    def _push(self, time: float, kind: int, data: tuple) -> None:
-        heapq.heappush(self._events, (time, kind, next(self._seq), data))
+    def _push(self, time: float, kind: int, payload) -> None:
+        heapq.heappush(self._events, (time, kind, next(self._seq), payload))
 
     def inject_arrival(self, arrival: Arrival) -> str:
         """Schedule one dynamic arrival (the closed-loop feedback edge).
@@ -200,65 +271,182 @@ class Simulator(MachineBase):
         run = KernelRun(key, arrival.spec, time, next(self._arrival_order))
         self._init_kernel_rng(run)
         self.runs[key] = run
-        self._push(time, _ARRIVAL, (key,))
+        self._invalidate_active()
+        self._pending_arrivals += 1
+        self._push(time, _ARRIVAL, key)
         return key
 
     def run(self, until: Optional[float] = None) -> "SimResult":
-        while self._events:
-            time, kind, _, data = heapq.heappop(self._events)
-            if until is not None and time > until:
+        events = self._events
+        sms = self.sms
+        horizon = math.inf if until is None else until
+        pop = heapq.heappop
+        handle_block_end = self._handle_block_end
+        handle_arrival = self._handle_arrival
+        try_issue = self._try_issue
+        while events:
+            item = pop(events)
+            time = item[0]
+            if time > horizon:
                 # Truncated: blocks still in flight have run from their
                 # start to the window edge — credit that busy time so
-                # utilization stays meaningful for open-loop runs.
-                for _, k, _, d in self._events + [(time, kind, 0, data)]:
-                    if k == _BLOCK_END:
-                        frac = self.runs[d[0]].spec.resource_fraction
-                        self.busy_time += max(0.0, self.now - d[3]) * frac
+                # utilization stays meaningful for open-loop runs.  The
+                # remaining heap is scanned in place (no copy), with the
+                # just-popped event credited last, exactly as the old
+                # copy-and-append scan ordered it.
+                runs = self.runs
+                now = self.now
+                for it in events:
+                    if it[1] == _BLOCK_END:
+                        frac = runs[it[3]].spec.resource_fraction
+                        self.busy_time += max(0.0, now - it[6]) * frac
+                if item[1] == _BLOCK_END:
+                    frac = runs[item[3]].spec.resource_fraction
+                    self.busy_time += max(0.0, now - item[6]) * frac
                 break
             self.now = time
-            if kind == _ARRIVAL:
-                self._handle_arrival(*data)
-            elif kind == _BLOCK_END:
-                self._handle_block_end(*data)
+            kind = item[1]
+            if kind == _BLOCK_END:
+                self._era += 1
+                handle_block_end(item[3], item[4], item[5], item[6])
+            elif kind == _ARRIVAL:
+                self._era += 1
+                handle_arrival(item[3])
             else:
-                self._try_issue(self.sms[data[0]])
+                # Gate retries mutate nothing themselves (allocations bump
+                # the era): a retry with no intervening event is the one
+                # place a memoized decision legitimately hits.
+                try_issue(sms[item[3]])
         return SimResult(self)
+
+    def arrivals_pending(self) -> bool:
+        """Queued arrival events remain, or a closed-loop source may emit
+        more — the DES knows its whole future arrival surface exactly."""
+        return self._pending_arrivals > 0 or self._arrival_source is not None
 
     # ------------------------------------------------------------- handlers
     def _handle_arrival(self, key: str) -> None:
+        self._pending_arrivals -= 1
         self.core.post(KernelArrived(key, self.now))
+        self._fan_out()
+
+    def _fan_out(self) -> None:
+        """Offer an issue opportunity machine-wide (arrival / kernel end).
+
+        The fast-path footprint precheck inside :meth:`_try_issue` makes
+        each per-SM offer O(1) for SMs that could not physically accept a
+        block of any active kernel (the targeted re-issue of DESIGN.md
+        Section 8)."""
         for sm in self.sms:
             self._try_issue(sm)
+
+    def _min_footprint(self) -> Tuple[int, float]:
+        """(min threads/block, min resource fraction) over active kernels
+        with undispatched blocks (-1 threads when none exist).
+
+        An SM without headroom for even this footprint provably cannot
+        receive an issue grant — every grant requires :meth:`can_fit`,
+        which requires the resource fit — and decisions are
+        side-effect-free, so not *asking* such an SM is schedule-identical
+        (the skipped Hold merely goes unrecorded)."""
+        min_tpb = -1
+        min_frac = 0.0
+        for run in self._active_runs():
+            spec = run.spec
+            if spec.num_blocks > run.issued:
+                tpb = spec.threads_per_block
+                frac = spec.resource_fraction
+                if min_tpb < 0:
+                    min_tpb = tpb
+                    min_frac = frac
+                else:
+                    if tpb < min_tpb:
+                        min_tpb = tpb
+                    if frac < min_frac:
+                        min_frac = frac
+        mf = (min_tpb, min_frac)
+        self._minfoot = mf
+        self._minfoot_dirty = False
+        return mf
 
     def _handle_block_end(self, key: str, sm_index: int, slot: int,
                           start: float) -> None:
         run = self.runs[key]
         sm = self.sms[sm_index]
-        self.busy_time += (self.now - start) * run.spec.resource_fraction
-        sm.free(slot, run.spec)
-        run.resident_per_sm[sm_index] -= 1
-        run.done += 1
-        pred = self.core.post(BlockEnded(key, sm_index, slot, self.now))
+        spec = run.spec
+        now = self.now
+        self.busy_time += (now - start) * spec.resource_fraction
+        if self.fast_path:
+            # Inlined SMState.free (same clamps), fused event dispatch.
+            del sm.resident[slot]
+            sm.free_slots.append(slot)
+            ut = sm.used_threads - spec.threads_per_block
+            sm.used_threads = ut if ut > 0 else 0
+            uf = sm.used_fraction - spec.resource_fraction
+            sm.used_fraction = uf if uf > 0.0 else 0.0
+            run.resident_per_sm[sm_index] -= 1
+            run.done += 1
+            if self._drive_predictor:
+                # SchedulerCore.post_block_end's exact dispatch, fused.
+                pred = self._predictor_on_block_end(key, sm_index, slot,
+                                                    now)
+                self._policy_on_block_end(key, sm_index)
+            else:
+                # Prediction-free policy: Algorithm 1 is dead bookkeeping;
+                # the policy hook still fires in the core's order.
+                pred = None
+                self._policy_on_block_end(key, sm_index)
+        else:
+            sm.free(slot, spec)
+            run.resident_per_sm[sm_index] -= 1
+            run.done += 1
+            pred = self.core.post(BlockEnded(key, sm_index, slot, now))
         if self.predictions is not None and pred is not None:
             self.predictions.append(PredictionRecord(
-                key, sm_index, self.now,
+                key, sm_index, now,
                 self.predictor.done_blocks(key, sm_index), pred))
-        if run.done == run.spec.num_blocks:
-            run.finish_time = self.now
-            self.core.post(KernelEnded(key, self.now))
+        if run.done == spec.num_blocks:
+            run.finish_time = now
+            self.core.post(KernelEnded(key, now))
             self._feed_completion(key)
-            for other_sm in self.sms:
-                self._try_issue(other_sm)
+            self._fan_out()
         else:
             self._try_issue(sm)
+
+    def _invalidate_active(self, ended: Optional[str] = None) -> None:
+        # Arrivals/kernel ends also change the min-footprint set.
+        self._minfoot_dirty = True
+        super()._invalidate_active(ended)
 
     # ---------------------------------------------------------------- issue
     def _cap_residency(self, key: str, sm: int) -> int:
         # On the GPU the residency cap constrains per-SM resident blocks.
-        return self.runs[key].resident(sm)
+        return self.runs[key].resident_per_sm[sm]
 
     def _fits_resources(self, key: str, sm: int) -> bool:
         return self.sms[sm].fits(self.runs[key].spec)
+
+    def can_fit(self, key: str, sm: int) -> bool:
+        # Fused override of MachineBase.can_fit — policies call this on
+        # every issue opportunity, so the unissued/cap/resource checks are
+        # inlined into one frame (identical semantics to the base
+        # implementation driving the two hooks above).
+        run = self.runs[key]
+        spec = run.spec
+        if spec.num_blocks - run.issued <= 0:
+            return False
+        cap = spec.max_residency
+        if not self._policy_unlimited:
+            pcap = self.core.policy.residency_cap(key, sm)
+            if pcap < cap:
+                cap = pcap
+        if run.resident_per_sm[sm] >= cap:
+            return False
+        s = self.sms[sm]
+        return (bool(s.free_slots)
+                and s.used_threads + spec.threads_per_block
+                <= MAX_THREADS_PER_SM
+                and s.used_fraction + spec.resource_fraction <= 1.0 + _EPS)
 
     def _try_issue(self, sm: SMState) -> None:
         # Issue as many blocks as the core grants in this batch, then
@@ -266,62 +454,139 @@ class Simulator(MachineBase):
         # start at the same instant all execute at the final residency (as on
         # hardware, where a whole wave is dispatched together) rather than at
         # the transient residency seen mid-dispatch.
+        smi = sm.index
+        fast = self.fast_path
+        record = self.decisions
         batch: List[tuple] = []  # (run, slot, noise_idx, first_wave)
         while True:
-            decision = self.core.decide(sm.index)
-            if self.decisions is not None:
-                self.decisions.append((self.now, sm.index, decision))
-            key = grants_issue(decision)
-            if key is None:
+            if fast:
+                if record is None:
+                    # Targeted ask: skip the decision entirely when no
+                    # active kernel's smallest block could physically land
+                    # here (see :meth:`_min_footprint` for why this is
+                    # schedule-safe).  With decision recording on, every
+                    # SM is asked so the log stays the complete ask
+                    # pattern (the memoization cross-check relies on it).
+                    if self._minfoot_dirty:
+                        mf = self._min_footprint()
+                    else:
+                        mf = self._minfoot
+                    tpb = mf[0]
+                    if (tpb < 0
+                            or not sm.free_slots
+                            or sm.used_threads + tpb > MAX_THREADS_PER_SM
+                            or sm.used_fraction + mf[1] > 1.0 + _EPS):
+                        break
+                memo = self._decision_memo[smi]
+                if memo is not None and memo[0] == self._era:
+                    decision = memo[1]
+                else:
+                    decision = self._policy_decide(smi)
+            else:
+                decision = self.core.decide(smi)
+            if record is not None:
+                record.append((self.now, smi, decision))
+            if isinstance(decision, (IssueGrant, SampleOnSM)):
+                key = decision.key
+            else:
+                # Non-grant decisions are era-stable: memoize so a re-ask
+                # with no intervening event (e.g. a gate retry) is free.
+                if fast:
+                    self._decision_memo[smi] = (self._era, decision)
                 break
             run = self.runs[key]
-            gate = run.issue_gate.get(sm.index, 0.0)
+            gate = run.issue_gate[smi]
             if gate > self.now + _EPS:
-                self._push(gate, _TRY_ISSUE, (sm.index,))
+                self._push(gate, _TRY_ISSUE, smi)
                 break
-            if not self.can_fit(key, sm.index):
-                break  # defensive: the core only grants issuable kernels
-            batch.append(self._allocate_block(run, sm))
+            if not fast and not self.can_fit(key, smi):
+                # Defensive re-check on the reference path only: every
+                # shipped policy verifies can_fit before granting, so the
+                # fast path trusts the grant (conformance-tested).
+                break
+            # --- allocate (inlined; one call site, runs once per block) --
+            spec = run.spec
+            self._era += 1   # issue state changed: memoized decisions expire
+            slot = sm.free_slots.pop()
+            sm.resident[slot] = run.key
+            sm.used_threads += spec.threads_per_block
+            sm.used_fraction += spec.resource_fraction
+            run.resident_per_sm[smi] += 1
+            issued_on_sm = run.issued_per_sm[smi]
+            run.issued_per_sm[smi] = issued_on_sm + 1
+            if run.first_issue_time is None:
+                run.first_issue_time = self.now
+            first_wave = issued_on_sm < spec.max_residency
+            noise_idx = run.issued
+            run.issued += 1
+            if run.issued == spec.num_blocks:
+                self._minfoot_dirty = True   # last block issued
+            if first_wave and run.stagger_sm[smi]:
+                run.issue_gate[smi] = \
+                    self.now + spec.stagger_frac * spec.mean_t
+            batch.append((run, slot, noise_idx, first_wave))
         for run, slot, noise_idx, first_wave in batch:
             self._finalize_block(run, sm, slot, noise_idx, first_wave)
-
-    def _allocate_block(self, run: KernelRun, sm: SMState) -> tuple:
-        spec = run.spec
-        slot = sm.alloc(run.key, spec)
-        run.resident_per_sm[sm.index] = run.resident(sm.index) + 1
-        issued_on_sm = run.issued_per_sm.get(sm.index, 0)
-        run.issued_per_sm[sm.index] = issued_on_sm + 1
-        if run.first_issue_time is None:
-            run.first_issue_time = self.now
-        first_wave = issued_on_sm < spec.max_residency
-        noise_idx = run.issued
-        run.issued += 1
-        if first_wave and run.stagger_sm.get(sm.index, False):
-            run.issue_gate[sm.index] = self.now + spec.stagger_frac * spec.mean_t
-        return (run, slot, noise_idx, first_wave)
 
     def _finalize_block(self, run: KernelRun, sm: SMState, slot: int,
                         noise_idx: int, first_wave: bool) -> None:
         spec = run.spec
-        residency = run.resident(sm.index)
+        smi = sm.index
+        residency = run.resident_per_sm[smi]
+        runs = self.runs
+        # Co-runner pressure, summed in arrival order over the kernels with
+        # blocks resident on this SM.  The per-(kernel, sm) residency
+        # contributions are maintained incrementally on alloc/free
+        # (``resident_per_sm``), so no rescan of the slot map is needed;
+        # the reference path below recomputes the same sum from the
+        # ground-truth slot map (same order, same per-term association, so
+        # the two are bit-identical).
         corunner_warps = 0.0
-        for other_key in set(sm.resident.values()):
-            if other_key == run.key:
-                continue
-            other = self.runs[other_key]
-            corunner_warps += (
-                other.spec.corunner_pressure
-                * other.resident(sm.index) * other.spec.warps_per_block)
+        if self.fast_path:
+            for other in self._active_runs():
+                if other is run:
+                    continue
+                cnt = other.resident_per_sm[smi]
+                if cnt:
+                    corunner_warps += (
+                        (other.spec.corunner_pressure * cnt)
+                        * other.spec.warps_per_block)
+        else:
+            resident = sorted(set(sm.resident.values()),
+                              key=lambda k: runs[k].order)
+            for other_key in resident:
+                if other_key == run.key:
+                    continue
+                other = runs[other_key]
+                corunner_warps += (
+                    other.spec.corunner_pressure
+                    * other.resident(smi) * other.spec.warps_per_block)
 
-        base = spec.duration(None, residency, corunner_warps, first_wave)
-        duration = base * float(run.noise[noise_idx])
-
-        self.core.post(BlockStarted(run.key, sm.index, slot, self.now))
-        self._push(self.now + duration, _BLOCK_END,
-                   (run.key, sm.index, slot, self.now))
+        if self.fast_path:
+            # Inlined KernelSpec.duration (rng=None), reading the memoized
+            # base-duration table: identical arithmetic, no call overhead.
+            t = spec.base_t_table[
+                residency if residency < spec.max_residency
+                else spec.max_residency]
+            if corunner_warps > 0.0:
+                t *= 1.0 + spec.corunner_sens * (
+                    corunner_warps / MAX_WARPS_PER_SM)
+            if first_wave and spec.startup_factor > 0.0:
+                t *= 1.0 + spec.startup_factor
+            base = t if t > 1.0 else 1.0    # max(t, 1.0)
+            duration = base * run.noise[noise_idx]
+            if self._drive_predictor:
+                self._post_block_start(run.key, smi, slot, self.now)
+        else:
+            base = spec.duration(None, residency, corunner_warps, first_wave)
+            duration = base * float(run.noise[noise_idx])
+            self.core.post(BlockStarted(run.key, smi, slot, self.now))
+        heapq.heappush(self._events,
+                       (self.now + duration, _BLOCK_END, next(self._seq),
+                        run.key, smi, slot, self.now))
         if self.trace is not None:
             self.trace.append(BlockRecord(
-                run.key, sm.index, slot, self.now, self.now + duration))
+                run.key, smi, slot, self.now, self.now + duration))
 
 
 class SimResult:

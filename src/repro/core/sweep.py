@@ -355,14 +355,36 @@ def _code_fingerprint(machine: str = "des") -> str:
     return fp
 
 
+#: Per-process in-memory mirror of the on-disk cache, keyed by
+#: (cache_dir, content key).  Cache keys are content-addressed — a record
+#: for a key never legitimately changes — so warm reruns inside one
+#: process (the benchmark driver runs several modules over one shared
+#: sweep; tests re-run specs back to back) skip the disk read *and* the
+#: JSON parse entirely.  Keying by cache_dir keeps distinct directories
+#: (e.g. per-test tmp dirs) fully independent.
+_read_memo: Dict[Tuple[str, str], dict] = {}
+
+
+def clear_cache_memo() -> None:
+    """Drop the in-memory cache mirror (tests that mutate cache files on
+    disk out-of-band call this to force re-reads)."""
+    _read_memo.clear()
+
+
 def _cache_read(cache_dir: Optional[Path], key: str) -> Optional[dict]:
     if cache_dir is None:
         return None
+    memo_key = (str(cache_dir), key)
+    hit = _read_memo.get(memo_key)
+    if hit is not None:
+        return hit
     path = cache_dir / f"{key}.json"
     try:
-        return json.loads(path.read_text())
+        record = json.loads(path.read_text())
     except (FileNotFoundError, json.JSONDecodeError):
         return None
+    _read_memo[memo_key] = record
+    return record
 
 
 def _cache_write(cache_dir: Optional[Path], key: str, record: dict) -> None:
@@ -374,6 +396,10 @@ def _cache_write(cache_dir: Optional[Path], key: str, record: dict) -> None:
     tmp.write_text(json.dumps(_nan_to_null(record), sort_keys=True,
                               allow_nan=False))
     os.replace(tmp, path)  # atomic under concurrent writers
+    # Mirror what a reader would decode (NaN -> null -> NaN round-trips in
+    # the consumers), so a same-process warm hit is indistinguishable from
+    # a disk hit.
+    _read_memo[(str(cache_dir), key)] = record
 
 
 def _des_solo_key(spec: KernelSpec, seed: int, n_sm: int) -> str:
@@ -754,11 +780,11 @@ def _measure_solos(solo_specs: Dict[tuple, KernelSpec], spec: SweepSpec,
     return memo, {"solo_computed": computed, "solo_pool_jobs": pool_jobs}
 
 
-def run_sweep(spec: SweepSpec, jobs: int = 1,
-              cache_dir: Optional[Union[str, Path]] = None) -> SweepResult:
-    """Execute every cell of ``spec``; see the module docstring."""
-    t0 = time.perf_counter()
-    cache_dir = Path(cache_dir) if cache_dir is not None else None
+def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
+                records: Dict[str, dict], pending: List[dict]) -> dict:
+    """Pass 2 for one spec: resolve every cell against the cache and the
+    shared ``records``/``pending`` state; returns the spec's bookkeeping
+    (ordered cell labels + per-spec stats)."""
     on_executor = spec.machine == "executor"
     # Executor cells are measurements: a fresh nonce per run keeps them out
     # of cross-run cache hits while in-run dedup still works.
@@ -767,10 +793,8 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
     worklist, solo_specs = _materialize(spec)
     solo_memo, solo_stats = _measure_solos(solo_specs, spec, jobs, cache_dir)
 
-    pending: List[dict] = []
     ordered: List[Tuple[str, dict]] = []   # (key, labels) in cell order
-    records: Dict[str, dict] = {}          # key -> raw record (disk hits)
-    hits = 0
+    hits = dedup = queued = 0
     for scn, seed, wl_name, arrivals, wl_specs in worklist:
         closed = arrivals is None
         wl_solo = {
@@ -809,13 +833,17 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
                     "seed": seed,
                 }))
                 if key in records:
-                    continue   # in-flight dedup (e.g. SJF == FIFO)
+                    # In-flight dedup: SJF == FIFO of the mirrored
+                    # workload, or a sibling spec in the same batch.
+                    dedup += 1
+                    continue
                 hit = _cache_read(cache_dir, key)
                 if hit is not None:
                     hits += 1
                     records[key] = hit
                     continue
                 records[key] = _PENDING
+                queued += 1
                 payload = {
                     "key": key, "arrivals": eff_arrivals,
                     "policy": eff_policy, "predictor": pred_name,
@@ -830,38 +858,87 @@ def run_sweep(spec: SweepSpec, jobs: int = 1,
                     payload["scenario_obj"] = scn
                     payload["workload_name"] = wl_name
                 pending.append(payload)
+    return {
+        "ordered": ordered,
+        "stats": {
+            "cells": len(ordered), "cache_hits": hits,
+            "computed": queued, "deduplicated": dedup,
+            "jobs": jobs, "machine": spec.machine,
+            **solo_stats,
+        },
+    }
 
-    if pending:
+
+def _execute_pending(pending: List[dict], jobs: int,
+                     records: Dict[str, dict]) -> None:
+    """Run every queued payload (one pool per machine kind) and fill
+    ``records``."""
+    by_machine: Dict[str, List[dict]] = {}
+    for payload in pending:
+        by_machine.setdefault(payload["machine"], []).append(payload)
+    for machine, batch in by_machine.items():
+        on_executor = machine == "executor"
         if jobs > 1:
             # Fork is fine for the pure-Python DES; executor cells run real
             # JAX, and forking a process with an initialized JAX runtime
             # can deadlock — spawn workers instead (they re-import and
             # re-JIT, which the per-cell compile cost dominates anyway).
+            # Longest-cells-first dispatch (LPT): DES cell cost tracks the
+            # total block count, and launching the SHA1-sized cells first
+            # keeps them off the pool's tail.  Results are keyed by cell
+            # key, so dispatch order never affects the output.
+            def _cost(payload: dict) -> float:
+                arrivals = payload.get("arrivals")
+                if arrivals is None:
+                    return math.inf      # closed loop: unknown, go first
+                return float(sum(a.spec.num_blocks for a in arrivals))
+
+            batch.sort(key=_cost, reverse=True)
             ctx = multiprocessing.get_context("spawn") if on_executor else None
             with ProcessPoolExecutor(max_workers=jobs,
                                      mp_context=ctx) as pool:
-                results = list(pool.map(_run_cell, pending, chunksize=1))
+                results = list(pool.map(_run_cell, batch, chunksize=1))
         else:
-            results = [_run_cell(p) for p in pending]
-        for payload, record in zip(pending, results):
+            results = [_run_cell(p) for p in batch]
+        for payload, record in zip(batch, results):
             records[payload["key"]] = record
 
-    cells = [CellResult.from_record(records[key], **labels)
-             for key, labels in ordered]
-    stats = {
-        "cells": len(ordered), "cache_hits": hits,
-        "computed": len(pending),
-        "deduplicated": len(ordered) - len(records),
-        "jobs": jobs, "machine": spec.machine,
-        "elapsed_s": time.perf_counter() - t0,
-        **solo_stats,
-    }
-    return SweepResult(cells, stats)
+
+def run_sweeps(specs: Sequence[SweepSpec], jobs: int = 1,
+               cache_dir: Optional[Union[str, Path]] = None
+               ) -> List[SweepResult]:
+    """Execute several sweeps as ONE batch: all cache misses share one
+    worker pool (one straggler tail instead of one per sweep) and cells
+    shared between specs are computed once, in flight, instead of meeting
+    through the on-disk cache.  Returns one :class:`SweepResult` per spec,
+    exactly as consecutive :func:`run_sweep` calls would."""
+    t0 = time.perf_counter()
+    cache_dir = Path(cache_dir) if cache_dir is not None else None
+    records: Dict[str, dict] = {}          # key -> raw record
+    pending: List[dict] = []
+    queued = [_queue_spec(spec, jobs, cache_dir, records, pending)
+              for spec in specs]
+    _execute_pending(pending, jobs, records)
+    elapsed = time.perf_counter() - t0
+    out = []
+    for entry in queued:
+        cells = [CellResult.from_record(records[key], **labels)
+                 for key, labels in entry["ordered"]]
+        out.append(SweepResult(cells,
+                               {**entry["stats"], "elapsed_s": elapsed}))
+    return out
+
+
+def run_sweep(spec: SweepSpec, jobs: int = 1,
+              cache_dir: Optional[Union[str, Path]] = None) -> SweepResult:
+    """Execute every cell of ``spec``; see the module docstring."""
+    return run_sweeps([spec], jobs=jobs, cache_dir=cache_dir)[0]
 
 
 __all__ = [
     "CACHE_VERSION",
     "CellResult",
+    "clear_cache_memo",
     "MACHINES",
     "MetricsCI",
     "SweepResult",

@@ -62,6 +62,17 @@ class KernelSpec:
         return math.ceil(self.threads_per_block / THREADS_PER_WARP)
 
     @functools.cached_property
+    def base_t_table(self) -> Tuple[float, ...]:
+        """``base_t(r)`` for every legal residency, indexed by ``r``.
+
+        The DES issue loop reads the mean block duration once per executed
+        block; the table replaces the clamp-and-normalise arithmetic of
+        :meth:`base_t` with one tuple index (entry 0 aliases residency 1,
+        matching ``base_t``'s clamp) and is bit-identical by construction.
+        """
+        return tuple(self.base_t(r) for r in range(self.max_residency + 1))
+
+    @functools.cached_property
     def resource_fraction(self) -> float:
         """Fraction of one SM consumed by one resident block.
 

@@ -1,0 +1,246 @@
+"""Fast-path equivalence suite (DESIGN.md Section 8).
+
+The DES fast paths — fused event dispatch, the event-driven active-set
+cache, delta residency-cap sync, the incremental corunner aggregate,
+decision memoization and the targeted issue fan-out — are contractually
+**bit-identical** to the reference implementations.  This suite enforces
+the contract end to end:
+
+* a matrix of scenarios x policies x predictors runs every cell twice
+  (``fast_path=True`` vs ``False``) and asserts the full observable
+  surface is identical: per-kernel turnaround/finish/arrival times,
+  unfinished sets, makespan/end_time/utilization/busy_time, the complete
+  block trace, every Eq. 2 prediction record, and — with decision
+  recording on, which keeps the complete ask pattern — the *identical*
+  decision sequence (the memoization cross-check);
+* closed-loop cells run the same comparison through the ArrivalSource
+  feedback edge, truncated open-loop cells through ``run(until=...)``;
+* the targeted fan-out is shown to only ever *remove* provably-Hold asks
+  (never to change schedules), and the fused ``post_block_*`` core entry
+  points are pinned to the typed ``post()`` dispatch at the
+  SchedulerCore level.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.events import BlockEnded, BlockStarted, KernelArrived
+from repro.core.machine import SchedulerCore
+from repro.core.policies import make_policy
+from repro.core.scenarios import Bursty, MGkClosed, NProgramMix, PoissonOpen
+from repro.core.simulator import Simulator
+from repro.core.workload import Arrival, KernelSpec
+
+#: Small kernels that still exercise every duration-model effect: noise,
+#: startup factors, co-runner pressure/sensitivity and staggered starts.
+TINY = {
+    spec.name: spec
+    for spec in [
+        KernelSpec("A", 48, 4, 128, 900.0, rsd=0.25, startup_factor=0.2),
+        KernelSpec("B", 36, 6, 256, 1400.0, rsd=0.10,
+                   corunner_pressure=1.4),
+        KernelSpec("C", 60, 8, 64, 700.0, rsd=0.30,
+                   stagger_frac=0.3, stagger_sm_prob=0.5),
+        KernelSpec("D", 24, 3, 192, 2000.0, corunner_sens=1.5),
+    ]
+}
+
+#: Arbitrary-but-fixed solo oracle (srtf-zero and the SJF family read it).
+ORACLE = {"A": 11_000.0, "B": 8_500.0, "C": 5_200.0, "D": 16_000.0}
+
+N_SM = 6
+SEED = 2
+
+POLICIES = ("fifo", "fifo-cap", "mpmax", "srtf", "srtf-adaptive",
+            "srtf-zero")
+
+
+def _open_loop_workloads():
+    """name -> arrival list, spanning 2-kernel, 3-kernel and generated
+    (poisson / bursty / 4-program) shapes."""
+    out = {
+        "pair": [Arrival(TINY["A"], 0.0, uid="A#0"),
+                 Arrival(TINY["B"], 50.0, uid="B#1")],
+        "trio": [Arrival(TINY["C"], 0.0, uid="C#0"),
+                 Arrival(TINY["D"], 10.0, uid="D#1"),
+                 Arrival(TINY["A"], 20.0, uid="A#2")],
+    }
+    names = sorted(TINY)
+    out["poisson"] = PoissonOpen(
+        seed=SEED, names=names, specs=TINY, n_arrivals=8,
+        mean_interarrival=2_000.0, n_workloads=1).workloads()[0][1]
+    out["bursty"] = Bursty(
+        seed=SEED, names=names, specs=TINY, n_bursts=3, within_gap=100.0,
+        idle_gap=20_000.0, n_workloads=1).workloads()[0][1]
+    out["mix4"] = NProgramMix(
+        seed=SEED, names=names, specs=TINY, n_programs=4,
+        max_stagger=200.0, n_workloads=1).workloads()[0][1]
+    return out
+
+
+WORKLOADS = _open_loop_workloads()
+
+
+def _run(arrivals, policy, *, fast, predictor=None, until=None,
+         source=None, record_decisions=True):
+    sim = Simulator(
+        arrivals, make_policy(policy), n_sm=N_SM, seed=SEED,
+        record_trace=True, record_predictions=True,
+        record_decisions=record_decisions, oracle_runtimes=dict(ORACLE),
+        predictor=predictor, fast_path=fast)
+    if source is not None:
+        sim.attach_arrival_source(source)
+    res = sim.run(until=until)
+    return sim, res
+
+
+def _assert_identical(a, b, *, decisions=True):
+    sim_a, res_a = a
+    sim_b, res_b = b
+    assert res_a.turnaround == res_b.turnaround
+    assert res_a.finish == res_b.finish
+    assert res_a.arrival == res_b.arrival
+    assert res_a.unfinished == res_b.unfinished
+    assert res_a.end_time == res_b.end_time
+    assert res_a.makespan == res_b.makespan
+    assert res_a.utilization == res_b.utilization
+    assert sim_a.busy_time == sim_b.busy_time
+    assert ([dataclasses.astuple(r) for r in sim_a.trace]
+            == [dataclasses.astuple(r) for r in sim_b.trace])
+    assert ([dataclasses.astuple(p) for p in sim_a.predictions]
+            == [dataclasses.astuple(p) for p in sim_b.predictions])
+    if decisions:
+        assert sim_a.decisions == sim_b.decisions
+
+
+# ------------------------------------------------------------ open loop
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("workload", sorted(WORKLOADS))
+def test_fast_path_identical_open_loop(workload, policy):
+    arrivals = WORKLOADS[workload]
+    _assert_identical(
+        _run(arrivals, policy, fast=True),
+        _run(arrivals, policy, fast=False))
+
+
+@pytest.mark.parametrize("policy", ("srtf", "srtf-adaptive"))
+@pytest.mark.parametrize("predictor", ("simple-slicing", "ewma"))
+def test_fast_path_identical_across_predictors(policy, predictor):
+    arrivals = WORKLOADS["mix4"]
+    _assert_identical(
+        _run(arrivals, policy, fast=True, predictor=predictor),
+        _run(arrivals, policy, fast=False, predictor=predictor))
+
+
+@pytest.mark.parametrize("policy", ("fifo", "srtf", "srtf-adaptive"))
+def test_fast_path_identical_truncated(policy):
+    arrivals = WORKLOADS["poisson"]
+    _assert_identical(
+        _run(arrivals, policy, fast=True, until=4_000.0),
+        _run(arrivals, policy, fast=False, until=4_000.0))
+
+
+# ----------------------------------------------------------- closed loop
+@pytest.mark.parametrize("policy", ("fifo", "srtf", "srtf-adaptive"))
+def test_fast_path_identical_closed_loop(policy):
+    scn = MGkClosed(seed=SEED, names=sorted(TINY), specs=TINY, n_total=10,
+                    mean_interarrival=1_500.0, population=3)
+    name = scn.process_names()[0]
+    _assert_identical(
+        _run([], policy, fast=True, source=scn.make_process(name)),
+        _run([], policy, fast=False, source=scn.make_process(name)))
+
+
+# ------------------------------------------- targeted fan-out / recording
+def test_recording_does_not_change_schedules():
+    """Decision recording disables the targeted skips (the log must be the
+    complete ask pattern); the schedule must be unaffected either way."""
+    arrivals = WORKLOADS["mix4"]
+    for policy in ("fifo", "srtf-adaptive"):
+        _assert_identical(
+            _run(arrivals, policy, fast=True, record_decisions=True),
+            _run(arrivals, policy, fast=True, record_decisions=False),
+            decisions=False)
+
+
+class _CountingFIFO:
+    """FIFO wrapper counting decide() asks (stays a pure pass-through)."""
+
+    def __init__(self):
+        self.inner = make_policy("fifo")
+        self.asks = 0
+        # Mirror the class-level hints the machine reads.
+        self.unlimited_caps = type(self.inner).unlimited_caps
+        self.uniform_caps = type(self.inner).uniform_caps
+        self.uses_predictor = type(self.inner).uses_predictor
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def decide(self, sm):
+        self.asks += 1
+        return self.inner.decide(sm)
+
+
+def test_targeted_fanout_only_removes_provable_holds():
+    arrivals = WORKLOADS["mix4"]
+
+    def run(fast):
+        policy = _CountingFIFO()
+        sim = Simulator(arrivals, policy, n_sm=N_SM, seed=SEED,
+                        record_trace=True, oracle_runtimes=dict(ORACLE),
+                        fast_path=fast)
+        res = sim.run()
+        return policy.asks, sim, res
+
+    asks_fast, sim_f, res_f = run(True)
+    asks_slow, sim_s, res_s = run(False)
+    assert asks_fast <= asks_slow
+    assert res_f.finish == res_s.finish
+    assert ([dataclasses.astuple(r) for r in sim_f.trace]
+            == [dataclasses.astuple(r) for r in sim_s.trace])
+
+
+# ------------------------------------------------- fused core dispatch
+def test_fused_dispatch_matches_typed_post():
+    """SchedulerCore.post_block_start/end must drive the exact predictor /
+    policy sequence the typed BlockStarted/BlockEnded dispatch drives."""
+    arrivals = [Arrival(TINY["A"], 0.0, uid="A#0"),
+                Arrival(TINY["B"], 0.0, uid="B#1")]
+
+    def fresh_core():
+        sim = Simulator(arrivals, make_policy("srtf"), n_sm=2, seed=0)
+        core: SchedulerCore = sim.core
+        for key in ("A#0", "B#1"):
+            core.post(KernelArrived(key, 0.0))
+        return core
+
+    typed, fused = fresh_core(), fresh_core()
+    script = [("A#0", 0, 0, 10.0, 40.0), ("B#1", 1, 0, 12.0, 55.0),
+              ("A#0", 0, 1, 41.0, 90.0)]
+    for key, sm, slot, start, end in script:
+        typed.post(BlockStarted(key, sm, slot, start))
+        fused.post_block_start(key, sm, slot, start)
+        pred_typed = typed.post(BlockEnded(key, sm, slot, end))
+        pred_fused = fused.post_block_end(key, sm, slot, end)
+        assert pred_typed == pred_fused
+    for key, sm, *_ in script:
+        st_t = typed.predictor.state(key, sm)
+        st_f = fused.predictor.state(key, sm)
+        assert dataclasses.astuple(st_t) == dataclasses.astuple(st_f)
+
+
+# ------------------------------------------------------ protocol extras
+def test_arrivals_pending_tracks_the_event_horizon():
+    arrivals = WORKLOADS["pair"]
+    sim = Simulator(arrivals, make_policy("fifo"), n_sm=N_SM, seed=SEED)
+    assert sim.arrivals_pending()
+    sim.run()
+    assert not sim.arrivals_pending()
+
+    scn = MGkClosed(seed=SEED, names=sorted(TINY), specs=TINY, n_total=4,
+                    mean_interarrival=500.0, population=2)
+    sim = Simulator([], make_policy("fifo"), n_sm=N_SM, seed=SEED)
+    sim.attach_arrival_source(scn.make_process(scn.process_names()[0]))
+    assert sim.arrivals_pending()     # the source may always emit more

@@ -95,7 +95,8 @@ class _RestrictedMachine:
     """
 
     _ALLOWED = ("n_sm", "predictor", "active_keys", "run_state", "residency",
-                "can_fit", "elapsed", "oracle_runtime", "sync_residency_caps")
+                "can_fit", "elapsed", "oracle_runtime", "arrivals_pending",
+                "sync_residency_caps")
 
     def __init__(self, machine):
         object.__setattr__(self, "_machine", machine)

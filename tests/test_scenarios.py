@@ -10,9 +10,11 @@ import pytest
 
 from repro.core.scenarios import (
     SCENARIOS,
+    Bursty,
     Diurnal,
     Scenario,
     TraceReplay,
+    fit_bursty_profile,
     fit_diurnal_profile,
     make_scenario,
     register_scenario,
@@ -246,6 +248,49 @@ def test_diurnal_from_trace_calibrates_a_runnable_scenario():
     assert first_half > len(arrivals) * 0.6
     with pytest.raises(ValueError, match="no arrivals"):
         Diurnal.from_trace(trace=[], n_segments=2, period=10.0)
+
+
+# ----------------------------------------------------------------- bursty
+def test_fit_bursty_profile_round_trips_generator_parameters():
+    """Calibration round trip: arrivals generated by Bursty, fitted back,
+    recover burst count, gap scales, the size cap and a plausible Pareto
+    shape (tolerances match the seed-swept spread of the estimator)."""
+    src = Bursty(seed=3, n_bursts=40, burst_alpha=1.5, max_burst=6,
+                 within_gap=1_000.0, idle_gap=500_000.0, n_workloads=1)
+    (_, arrivals), = src.workloads()
+    fitted = Bursty.from_trace(
+        trace=[{"kernel": a.spec.name, "time": a.time} for a in arrivals],
+        n_workloads=1)
+    assert 36 <= fitted.n_bursts <= 40     # merged bursts only lose a few
+    assert 1 <= fitted.max_burst <= 6      # never above the true cap
+    assert 500.0 <= fitted.within_gap <= 2_500.0
+    assert 250_000.0 <= fitted.idle_gap <= 1_000_000.0
+    assert 0.8 <= fitted.burst_alpha <= 3.0
+    # The calibrated scenario is runnable and deterministic.
+    (_, replay), = fitted.workloads()
+    assert replay and replay == fitted.workloads()[0][1]
+
+
+def test_fit_bursty_profile_explicit_threshold_and_degenerate_input():
+    # 2 bursts of 3, split 10 vs 1000 gaps; explicit threshold overrides.
+    times = [0.0, 10.0, 20.0, 1_020.0, 1_030.0, 1_040.0]
+    prof = fit_bursty_profile(times, threshold=100.0)
+    assert prof["n_bursts"] == 2 and prof["max_burst"] == 3
+    assert prof["within_gap"] == pytest.approx(10.0)
+    # inter-burst separation (1000) over-counts one within draw (10).
+    assert prof["idle_gap"] == pytest.approx(990.0)
+    auto = fit_bursty_profile(times)
+    assert auto["n_bursts"] == 2           # Otsu finds the same valley
+    single = fit_bursty_profile([5.0])
+    assert single["n_bursts"] == 1 and single["idle_gap"] == 0.0
+    with pytest.raises(ValueError):
+        fit_bursty_profile([])
+    with pytest.raises(ValueError):
+        fit_bursty_profile([-1.0, 2.0])
+    with pytest.raises(ValueError):
+        fit_bursty_profile(times, threshold=0.0)
+    with pytest.raises(ValueError, match="no arrivals"):
+        Bursty.from_trace(trace=[])
 
 
 # -------------------------------------------------------------- utilities

@@ -12,7 +12,12 @@ from repro.core.metrics import MetricsError, geomean
 from repro.core.scenarios import Scenario, TraceReplay, workload_digest
 from repro.core.simulator import simulate
 from repro.core.policies import make_policy
-from repro.core.sweep import SweepSpec, run_sweep, solo_runtime_cached
+from repro.core.sweep import (
+    SweepSpec,
+    clear_cache_memo,
+    run_sweep,
+    solo_runtime_cached,
+)
 from repro.core.workload import (
     Arrival,
     ERCBENCH,
@@ -150,6 +155,32 @@ def test_summary_over_selected_cells():
     assert m.stp > 0 and m.antt >= 1.0
     with pytest.raises(MetricsError):
         result.summary(policy="mpmax")          # not in the sweep
+
+
+def test_warm_rerun_serves_from_the_in_memory_memo(tmp_path):
+    """Within one process a warm rerun must not touch the disk at all:
+    the content-addressed records are mirrored in memory, keyed by
+    (cache_dir, key)."""
+    spec = spec_for(("fifo", "srtf"))
+    cold = run_sweep(spec, cache_dir=tmp_path)
+    assert cold.stats["computed"] == 2
+    # Delete every on-disk record: a pure-disk reader would now recompute.
+    for f in tmp_path.glob("*.json"):
+        f.unlink()
+    warm = run_sweep(spec, cache_dir=tmp_path)
+    assert warm.stats["computed"] == 0
+    assert warm.stats["cache_hits"] >= 2
+    assert [c.window for c in warm.cells] == [c.window for c in cold.cells]
+    # Distinct cache dirs never share memo entries...
+    other = tmp_path / "other"
+    fresh = run_sweep(spec, cache_dir=other)
+    assert fresh.stats["computed"] == 2
+    # ...and clearing the memo forces real disk reads again.
+    for f in tmp_path.glob("*.json"):
+        f.unlink()
+    clear_cache_memo()
+    cold_again = run_sweep(spec, cache_dir=tmp_path)
+    assert cold_again.stats["computed"] == 2
 
 
 def test_cache_version_is_part_of_the_key(tmp_path):
