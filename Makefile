@@ -1,9 +1,21 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: check check-all test test-all smoke smoke-sweep \
+.PHONY: analyze check check-all test test-all smoke smoke-sweep \
         smoke-sweep-closedloop smoke-sweep-executor golden \
         bench bench-smoke
+
+# Static determinism & cache-integrity analysis (DESIGN.md Section 9):
+# the three repro.analysis passes, then ruff (pyflakes/pycodestyle-errors/
+# isort per pyproject.toml).  Ruff is a dev extra — skipped with a notice
+# where it is not installed (CI installs it and enforces both).
+analyze:
+	$(PY) -m repro.analysis
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+		$(PY) -m ruff check src tests benchmarks; \
+	else \
+		echo "ruff not installed (pip install -r requirements-dev.txt); skipping lint gate"; \
+	fi
 
 # Fast tier (default): deselects @pytest.mark.slow (golden-trace sweep
 # regression, full Table-5 cells, 8-device distributed run).

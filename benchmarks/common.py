@@ -22,7 +22,6 @@ import numpy as np
 from repro.core import (
     Arrival,
     ERCBENCH,
-    PARBOIL2_LIKE,
     SweepResult,
     SweepSpec,
     evaluate,
@@ -31,9 +30,9 @@ from repro.core import (
     simulate,
     solo_runtime_cached,
 )
-from repro.core.sweep import run_sweeps
 from repro.core.metrics import WorkloadMetrics
 from repro.core.scenarios import ClosedLoopScenario, PairStagger, Scenario
+from repro.core.sweep import run_sweeps
 from repro.core.workload import reorder_for_oracle
 
 SEED = 0

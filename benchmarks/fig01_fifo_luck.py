@@ -31,9 +31,9 @@ def run():
         cells = _alphabetical(result.select(policy=pol))
         stp[pol] = [c.metrics.stp for c in cells]
     agree_sjf = agree_ljf = neutral = 0
-    for s, f, l in zip(stp["sjf"], stp["fifo"], stp["ljf"]):
-        ds, dl = abs(f - s), abs(f - l)
-        if abs(s - l) < 0.02:
+    for s, f, lj in zip(stp["sjf"], stp["fifo"], stp["ljf"]):
+        ds, dl = abs(f - s), abs(f - lj)
+        if abs(s - lj) < 0.02:
             neutral += 1
         elif ds <= dl:
             agree_sjf += 1

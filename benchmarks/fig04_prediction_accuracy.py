@@ -46,9 +46,9 @@ def _normalized_predictions(spec: KernelSpec, n_sm: int = 15, seed: int = 0):
 def _suite_stats(specs):
     eq1_all, lin_all = [], []
     for spec in specs:
-        e, l = _normalized_predictions(spec)
+        e, lin = _normalized_predictions(spec)
         eq1_all += e
-        lin_all += l
+        lin_all += lin
     def q(v):
         a = np.array(v)
         return (f"min={a.min():.2f};q1={np.percentile(a,25):.2f};"

@@ -44,9 +44,8 @@ from pathlib import Path
 
 from repro.core.policies import make_policy
 from repro.core.scenarios import MGkClosed, NProgramMix
-from repro.core.simulator import Simulator, simulate, solo_runtime
-from repro.core.sweep import SweepSpec, run_sweep
-from repro.core.workload import ERCBENCH, Arrival, scaled_spec
+from repro.core.simulator import Simulator, solo_runtime
+from repro.core.workload import Arrival, ERCBENCH, scaled_spec
 
 #: Reference measurements from the pre-fast-path commit (8244267), taken
 #: on this container with the exact protocol below, interleaved with the

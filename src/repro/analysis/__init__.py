@@ -1,0 +1,77 @@
+"""Static determinism & cache-integrity analysis for ``repro.core``.
+
+Three AST passes guard the invariants every reported number rests on
+(DESIGN.md Section 9):
+
+* :mod:`repro.analysis.importgraph` — the sweep-cache code fingerprint
+  (``sweep._FINGERPRINT_SOURCES``) must equal the transitive
+  import-closure of each machine's result-determining entry points;
+* :mod:`repro.analysis.determinism` — nondeterminism lints (unseeded
+  RNGs, set-iteration order, wall-clock reads, NaN-capable JSON, …) over
+  the schedule-determining modules, with a checked-in justification
+  baseline (:mod:`repro.analysis.report`);
+* :mod:`repro.analysis.protocol` — declared contracts vs. actual ASTs:
+  Policy hint flags, the fused/typed ``SchedulerCore`` dispatch pair, and
+  full Machine-protocol signatures.
+
+Run it as ``python -m repro.analysis`` (CI does, via ``make analyze``).
+The package never imports ``repro.core`` — everything is file-level AST,
+so it can analyze mutated copies of the tree (and the heavy simulator
+stack never loads just to lint).
+"""
+
+from __future__ import annotations
+
+from .cli import PASSES, main, run_passes
+from .determinism import (
+    default_scan_modules,
+    scan_determinism,
+    scan_source,
+)
+from .importgraph import (
+    ENTRY_POINTS,
+    NON_RESULT_MODULES,
+    build_import_graph,
+    check_fingerprint_coverage,
+    expected_fingerprint_sources,
+    load_fingerprint_table,
+    transitive_closure,
+)
+from .protocol import (
+    check_fused_paths,
+    check_machine_signatures,
+    check_policy_hints,
+    check_protocols,
+)
+from .report import (
+    Baseline,
+    Finding,
+    Report,
+    apply_baseline,
+    format_report,
+)
+
+__all__ = [
+    "Baseline",
+    "ENTRY_POINTS",
+    "Finding",
+    "NON_RESULT_MODULES",
+    "PASSES",
+    "Report",
+    "apply_baseline",
+    "build_import_graph",
+    "check_fingerprint_coverage",
+    "check_fused_paths",
+    "check_machine_signatures",
+    "check_policy_hints",
+    "check_protocols",
+    "default_scan_modules",
+    "expected_fingerprint_sources",
+    "format_report",
+    "load_fingerprint_table",
+    "main",
+    "run_passes",
+    "scan_determinism",
+    "scan_source",
+    "transitive_closure",
+]

@@ -1,0 +1,9 @@
+"""Entry point for ``python -m repro.analysis``."""
+
+from __future__ import annotations
+
+import sys
+
+from .cli import main
+
+sys.exit(main())

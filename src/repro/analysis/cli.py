@@ -1,0 +1,97 @@
+"""``python -m repro.analysis`` — run the determinism & cache-integrity
+analyzer.
+
+Exit status: 0 when every pass is clean (modulo the checked-in baseline),
+1 when any non-baselined finding blocks, 2 on usage errors.  CI runs this
+(via ``make analyze``) before the test tiers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .determinism import scan_determinism
+from .importgraph import CORE_DIR, check_fingerprint_coverage
+from .protocol import check_protocols
+from .report import (
+    Baseline,
+    Finding,
+    apply_baseline,
+    format_report,
+)
+
+PASSES = ("fingerprint", "determinism", "protocol")
+
+
+def run_passes(core_dir: Optional[Path] = None,
+               passes: Sequence[str] = PASSES) -> List[Finding]:
+    findings: List[Finding] = []
+    if "fingerprint" in passes:
+        findings.extend(check_fingerprint_coverage(core_dir))
+    if "determinism" in passes:
+        findings.extend(scan_determinism(core_dir))
+    if "protocol" in passes:
+        findings.extend(check_protocols(core_dir))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static determinism & cache-integrity analysis of "
+                    "repro.core (DESIGN.md Section 9).")
+    parser.add_argument(
+        "--core-dir", type=Path, default=None,
+        help="analyze this copy of the repro/core sources instead of the "
+             "installed package (mutation tests use this)")
+    parser.add_argument(
+        "--baseline", type=Path, default=None,
+        help="baseline file (default: the checked-in "
+             "src/repro/analysis/baseline.json)")
+    parser.add_argument(
+        "--passes", default=",".join(PASSES),
+        help=f"comma-separated subset of {PASSES}")
+    parser.add_argument(
+        "--write-baseline", action="store_true",
+        help="rewrite the baseline to accept all current determinism "
+             "findings (preserving reasons of kept entries); new entries "
+             "still need a hand-written reason before the run goes green")
+    parser.add_argument(
+        "-v", "--verbose", action="store_true",
+        help="also list baseline-suppressed findings")
+    args = parser.parse_args(argv)
+
+    passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
+    unknown = [p for p in passes if p not in PASSES]
+    if unknown:
+        parser.error(f"unknown pass(es) {unknown}; choose from {PASSES}")
+
+    core_dir = args.core_dir if args.core_dir is not None else CORE_DIR
+    if not Path(core_dir, "sweep.py").exists():
+        parser.error(f"{core_dir} does not look like repro/core "
+                     "(no sweep.py)")
+
+    findings = run_passes(core_dir, passes)
+    baseline = Baseline.load(args.baseline)
+
+    if args.write_baseline:
+        old_reasons = {k: r for k, (_, r) in baseline.entries.items()}
+        new = Baseline.from_findings(findings, reasons=old_reasons)
+        new.dump(args.baseline if args.baseline is not None
+                 else baseline.path)
+        print(f"baseline rewritten with {len(new.entries)} entr(y/ies); "
+              "fill in empty \"reason\" fields before committing")
+        baseline = new
+
+    report = apply_baseline(findings, baseline)
+    out = format_report(report, verbose=args.verbose)
+    if out:
+        print(out)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":          # pragma: no cover - exercised via -m
+    sys.exit(main())

@@ -8,8 +8,7 @@ published hyper-parameters; smoke tests use :func:`ArchConfig.reduced`.
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 #: Pad vocabularies to a multiple of this so the vocab dim shards over the

@@ -62,33 +62,6 @@ from .metrics import (
     geomean,
     summarize,
 )
-from .scenarios import (
-    ArrivalProcess,
-    ClosedLoopScenario,
-    Diurnal,
-    MGkClosed,
-    SCENARIOS,
-    Scenario,
-    ThinkTime,
-    executor_job,
-    executor_workload,
-    fit_diurnal_profile,
-    make_scenario,
-    open_loop_names,
-    register_scenario,
-    submission_offsets,
-    workload_digest,
-)
-from .sweep import (
-    CellResult,
-    MACHINES,
-    MetricsCI,
-    SweepResult,
-    SweepSpec,
-    run_sweep,
-    solo_runtime_cached,
-    solo_runtime_executor_cached,
-)
 from .policies import (
     FIFO,
     LJF,
@@ -110,7 +83,34 @@ from .predictor import (
     staircase_blocks_in,
     staircase_runtime,
 )
-from .simulator import Simulator, SimResult, simulate, solo_runtime
+from .scenarios import (
+    ArrivalProcess,
+    ClosedLoopScenario,
+    Diurnal,
+    MGkClosed,
+    SCENARIOS,
+    Scenario,
+    ThinkTime,
+    executor_job,
+    executor_workload,
+    fit_diurnal_profile,
+    make_scenario,
+    open_loop_names,
+    register_scenario,
+    submission_offsets,
+    workload_digest,
+)
+from .simulator import SimResult, Simulator, simulate, solo_runtime
+from .sweep import (
+    CellResult,
+    MACHINES,
+    MetricsCI,
+    SweepResult,
+    SweepSpec,
+    run_sweep,
+    solo_runtime_cached,
+    solo_runtime_executor_cached,
+)
 from .workload import (
     Arrival,
     ERCBENCH,

@@ -387,6 +387,9 @@ class LaneExecutor(MachineBase):
         run = self.runs[key]
         residency = self._residency(key) + 1
         fn = self._block_fn(key, residency)
+        # Baselined determinism finding (wallclock): real wall time IS this
+        # machine's time model — executor cells are measurements, marked
+        # measured=True and nonce-keyed out of cross-run cache hits.
         t0 = time.perf_counter()
         fn()                                        # REAL computation
         dur = (time.perf_counter() - t0) * lane.slow_factor

@@ -9,7 +9,6 @@ predictor exploits.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, Dict, Optional
 
 import jax
@@ -61,9 +60,9 @@ def make_train_job(
     def train_step(params, opt_state, tokens):
         def loss(p):
             return lm.loss_fn(cfg, p, {"tokens": tokens})[0]
-        l, grads = jax.value_and_grad(loss)(params)
+        loss_val, grads = jax.value_and_grad(loss)(params)
         new_p, new_s, _ = adamw.update(grads, opt_state, params, opt_cfg)
-        return new_p, new_s, l
+        return new_p, new_s, loss_val
 
     data_key = jax.random.PRNGKey(seed + 1)
 
@@ -79,8 +78,8 @@ def make_train_job(
             tokens = jax.random.randint(
                 jax.random.fold_in(data_key, i), (batch, seq), 0,
                 cfg.vocab_size)
-            p, o, l = train_step(state["params"], state["opt"], tokens)
-            jax.block_until_ready(l)
+            p, o, loss_val = train_step(state["params"], state["opt"], tokens)
+            jax.block_until_ready(loss_val)
             state["params"], state["opt"] = p, o
             state["block"] = i + 1
             if (checkpointer is not None and checkpoint_every

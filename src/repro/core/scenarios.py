@@ -1065,7 +1065,11 @@ def workload_digest(arrivals: Sequence[Arrival]) -> str:
         {"spec": dataclasses.asdict(a.spec), "time": a.time, "uid": a.uid}
         for a in arrivals
     ]
-    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    # allow_nan=False: a NaN spec field would otherwise serialize as the
+    # non-standard NaN token — and NaN != NaN, so two identical workloads
+    # could digest differently.  Loud failure beats a poisoned cache key.
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"),
+                      allow_nan=False)
     return hashlib.sha256(blob.encode()).hexdigest()
 
 

@@ -197,8 +197,8 @@ class SchedulerService:
     def tenant_metrics(self) -> Dict[str, WorkloadMetrics]:
         """STP/ANTT/fairness per tenant over finished (uncancelled) jobs."""
         with self._lock:
-            ledgers = {t: (dict(l.turnaround), dict(l.solo))
-                       for t, l in self._ledgers.items() if l.turnaround}
+            ledgers = {t: (dict(led.turnaround), dict(led.solo))
+                       for t, led in self._ledgers.items() if led.turnaround}
         return {t: evaluate(turn, solo) for t, (turn, solo) in ledgers.items()}
 
     def tenant_report(self) -> Dict[str, dict]:

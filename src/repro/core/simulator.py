@@ -552,6 +552,10 @@ class Simulator(MachineBase):
                         (other.spec.corunner_pressure * cnt)
                         * other.spec.warps_per_block)
         else:
+            # Baselined determinism finding (set-iteration): the sort key
+            # runs[k].order is unique per kernel, so the order is total and
+            # the set's salted-hash iteration order can never leak through
+            # a tie.  Reference path only (fast path sums unordered).
             resident = sorted(set(sm.resident.values()),
                               key=lambda k: runs[k].order)
             for other_key in resident:

@@ -325,20 +325,40 @@ def _canonical_digest(payload: dict) -> str:
 #: manual CACHE_VERSION bump.  machine.py/events.py carry SchedulerCore's
 #: dispatch logic and the decision types; workload.py holds the DES
 #: duration model (KernelSpec.duration/base_t); scenarios.py holds the
-#: executor bridge's block-cost mapping (_synthetic_shape/_jitted_block).
-#: Over-invalidation (e.g. an unrelated scenario edit) merely recomputes;
-#: under-invalidation silently serves stale numbers.
+#: executor bridge's block-cost mapping (_synthetic_shape/_jitted_block);
+#: metrics.py shapes the window/queueing numbers *stored in* every cache
+#: record.  Over-invalidation (e.g. an unrelated scenario edit) merely
+#: recomputes; under-invalidation silently serves stale numbers.
+#:
+#: Each tuple must equal the transitive closure of repro.core-internal
+#: imports from the machine's result-determining entry points
+#: (``repro.analysis.importgraph.ENTRY_POINTS``) — enforced statically by
+#: ``python -m repro.analysis`` and by tests/test_analysis.py.  The
+#: closure over-approximates (an import edge counts even if unexercised:
+#: scenarios.py pulls executor.py into the closed-loop DES fingerprint via
+#: the ExecutorJob bridge import), which is the safe direction for a
+#: cache key.
 _FINGERPRINT_SOURCES: Dict[str, Tuple[str, ...]] = {
     "des": ("simulator", "machine", "events", "policies", "predictor",
-            "workload"),
+            "workload", "metrics"),
     # Closed-loop DES cells additionally depend on scenarios.py: the
     # arrival *process* code (not a materialized list) determines what the
     # cell simulates, so an edit to it must invalidate those cells.
     "des-closed": ("simulator", "machine", "events", "policies",
-                   "predictor", "workload", "scenarios"),
+                   "predictor", "workload", "metrics", "scenarios",
+                   "executor"),
     "executor": ("executor", "machine", "events", "policies", "predictor",
-                 "workload", "scenarios"),
+                 "workload", "metrics", "scenarios"),
 }
+
+
+def fingerprint_sources() -> Dict[str, Tuple[str, ...]]:
+    """Per-machine fingerprint tables, as a defensive copy.
+
+    Public read surface for the static analyzer's coverage pass and the
+    drift tests; the table itself stays private so nothing mutates what
+    the cache keys are built from."""
+    return dict(_FINGERPRINT_SOURCES)
 
 _code_fp_memo: Dict[str, str] = {}
 
@@ -787,7 +807,9 @@ def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
     (ordered cell labels + per-spec stats)."""
     on_executor = spec.machine == "executor"
     # Executor cells are measurements: a fresh nonce per run keeps them out
-    # of cross-run cache hits while in-run dedup still works.
+    # of cross-run cache hits while in-run dedup still works.  Baselined
+    # determinism finding (uuid): the nonce exists precisely to be unique
+    # per run; it uniquifies keys and never shapes a result.
     nonce = uuid.uuid4().hex if on_executor else None
 
     worklist, solo_specs = _materialize(spec)
@@ -912,6 +934,9 @@ def run_sweeps(specs: Sequence[SweepSpec], jobs: int = 1,
     shared between specs are computed once, in flight, instead of meeting
     through the on-disk cache.  Returns one :class:`SweepResult` per spec,
     exactly as consecutive :func:`run_sweep` calls would."""
+    # Baselined determinism finding (wallclock): elapsed_s is driver-side
+    # bookkeeping landing only in SweepResult.stats — never in a cell
+    # record or a cache key.
     t0 = time.perf_counter()
     cache_dir = Path(cache_dir) if cache_dir is not None else None
     records: Dict[str, dict] = {}          # key -> raw record
@@ -939,6 +964,7 @@ __all__ = [
     "CACHE_VERSION",
     "CellResult",
     "clear_cache_memo",
+    "fingerprint_sources",
     "MACHINES",
     "MetricsCI",
     "SweepResult",

@@ -81,7 +81,7 @@ def _flash_fwd_core(qf, kc, vc, q_pos, mask_kind, window, kv_chunk, Sk):
     n_chunks = kc.shape[0]
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         idx, kci, vci = inp
         logits = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kci)
         k_pos = (idx * kv_chunk + jnp.arange(kv_chunk))[None, :]
@@ -90,18 +90,18 @@ def _flash_fwd_core(qf, kc, vc, q_pos, mask_kind, window, kv_chunk, Sk):
         m_new = jnp.maximum(m, logits.max(axis=-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(logits - m_new[..., None])
-        l = l * corr + p.sum(axis=-1)
+        lsum = lsum * corr + p.sum(axis=-1)
         acc = acc * corr[..., None] + jnp.einsum("bqhgk,bkhd->bqhgd", p, vci)
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     init = (jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32),
             jnp.zeros((B, Sq, KV, G), jnp.float32),
             jnp.zeros((B, Sq, KV, G, Dv), jnp.float32))
-    (m, l, acc), _ = jax.lax.scan(body, init,
+    (m, lsum, acc), _ = jax.lax.scan(body, init,
                                   (jnp.arange(n_chunks), kc, vc))
-    l = jnp.maximum(l, 1e-30)
-    out = acc / l[..., None]
-    lse = m + jnp.log(l)
+    lsum = jnp.maximum(lsum, 1e-30)
+    out = acc / lsum[..., None]
+    lse = m + jnp.log(lsum)
     return out, lse
 
 

@@ -28,12 +28,12 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
+import jax  # noqa: F401  -- deliberately first: see the XLA_FLAGS note above
 
-from repro.core.predictor import staircase_runtime
-from repro.core.scenarios import make_scenario, open_loop_names
 from repro.configs import ARCHS, SHAPES, get_arch
 from repro.configs.shapes import SHAPE_ORDER, shape_applicable
+from repro.core.predictor import staircase_runtime
+from repro.core.scenarios import make_scenario, open_loop_names
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step, build_unit_probes
 

@@ -15,10 +15,9 @@ Mesh axes:
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):

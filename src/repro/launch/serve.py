@@ -71,7 +71,7 @@ import asyncio
 import itertools
 from typing import Callable, Dict, List, Tuple
 
-from repro.configs import ARCHS, get_arch
+from repro.configs import get_arch
 from repro.core.executor import LaneExecutor
 from repro.core.jobs import make_serve_job
 from repro.core.metrics import evaluate, evaluate_queueing

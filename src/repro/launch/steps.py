@@ -7,7 +7,6 @@ invocation (the paper's structural runtime prediction) predicts the job.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
@@ -291,7 +290,7 @@ def build_unit_probes(cfg: ArchConfig, shape: InputShape, mesh=None,
             bundle = build_decode_step(cfg, shape, mesh=None, backend=backend)
             cache_struct = bundle.arg_specs[2][key]
             c_struct = jax.tree.map(
-                lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
                 cache_struct)
             c_sh = None
             if mesh is not None:
@@ -325,7 +324,7 @@ def build_unit_probes(cfg: ArchConfig, shape: InputShape, mesh=None,
     # encoder probe (whisper): forward-only layer over the frame sequence
     if cfg.encoder is not None and shape.kind in ("train", "prefill"):
         enc_u_struct = jax.tree.map(
-            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
             p_struct["encoder"]["layers"])
 
         def enc_probe(up, x):

@@ -27,7 +27,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import ARCHS, get_arch

@@ -10,9 +10,7 @@ encoder (whisper) and patch-embedding stub (pixtral).
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -189,7 +187,10 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: Dict, x, *,
                                  dtype=dtype)
         cache["cross"] = ckv
     aux = jnp.zeros((), jnp.float32)
-    whook = (lambda w: shard.weight_for_batch(w, x.shape[0]))
+
+    def whook(w):
+        return shard.weight_for_batch(w, x.shape[0])
+
     if spec.ffn == "dense":
         h2 = apply_norm(p["norm2"], x, cfg.norm)
         # nested remat: the FFN's [*, d_ff] intermediates are the largest
@@ -216,8 +217,9 @@ def _ring_or_pad_kv(kv: Dict, spec: LayerSpec, cfg: ArchConfig,
         W = cfg.rglru.window
         n = min(S, W)
         slots = (jnp.arange(S - n, S) % W)
-        ring = lambda a: jnp.zeros((a.shape[0], W) + a.shape[2:], a.dtype
-                                   ).at[:, slots].set(a[:, -n:])
+        def ring(a):
+            return jnp.zeros((a.shape[0], W) + a.shape[2:], a.dtype
+                             ).at[:, slots].set(a[:, -n:])
         return {"k": ring(k), "v": ring(v)}
     pad = max_seq - S
     if pad > 0:

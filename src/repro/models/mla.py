@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.configs.base import MLAConfig
 from repro.kernels import ops
 
-from .layers import DEFAULT_COMPUTE_DTYPE, apply_rope, apply_norm, cast, norm_init
+from .layers import DEFAULT_COMPUTE_DTYPE, apply_norm, apply_rope, cast, norm_init
 
 
 def mla_init(key, d_model: int, n_heads: int, m: MLAConfig) -> Dict:

@@ -8,7 +8,6 @@ Expert weights are stacked ``[E, ...]`` so the expert axis shards over the
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Dict, Tuple
 
@@ -19,7 +18,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import MoEConfig
 from repro.kernels import ops
 
-from .layers import DEFAULT_COMPUTE_DTYPE, cast, mlp_init, apply_mlp
+from .layers import DEFAULT_COMPUTE_DTYPE, apply_mlp, cast, mlp_init
 
 
 def moe_init(key, d_model: int, d_ff: int, cfg: MoEConfig) -> Dict:

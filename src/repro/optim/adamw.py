@@ -39,7 +39,8 @@ def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
 
 
 def init(params) -> Dict:
-    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    def zeros(p):
+        return jax.tree.map(jnp.zeros_like, p)
     return {"m": zeros(params), "v": zeros(params),
             "step": jnp.zeros((), jnp.int32)}
 

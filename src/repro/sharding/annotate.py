@@ -19,10 +19,9 @@ mesh axis is left unsharded, so the same model code runs on 1 CPU device
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

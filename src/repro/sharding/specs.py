@@ -139,7 +139,7 @@ def unit_struct(param_struct_tree, stage_key: str):
     """ShapeDtypeStructs for one repeat (drop the stacked axis)."""
     sub = param_struct_tree[stage_key]
     return jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), sub)
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), sub)
 
 
 # ------------------------------------------------------------------ batches

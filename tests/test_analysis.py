@@ -1,0 +1,242 @@
+"""Tests for the static determinism & cache-integrity analyzer.
+
+Three layers (DESIGN.md Section 9):
+
+* per-rule fixtures — each determinism lint fires exactly once on a
+  known-bad snippet and stays silent on the blessed idioms;
+* mutation tests — a scratch copy of ``repro/core`` is broken in the
+  precise ways the analyzer exists to catch (fingerprint module dropped,
+  shadow module smuggled in, hint flag contradicting the code, unseeded
+  RNG added) and each mutation must turn the CLI red;
+* bridge assertions — the checked-in ``_FINGERPRINT_SOURCES`` table
+  equals the import-graph closure the analyzer computes, so the cache
+  key provably covers every result-determining module.
+"""
+
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    Finding,
+    apply_baseline,
+    check_fingerprint_coverage,
+    check_machine_signatures,
+    check_policy_hints,
+    check_protocols,
+    expected_fingerprint_sources,
+    load_fingerprint_table,
+    main,
+    scan_determinism,
+    scan_source,
+)
+from repro.core.sweep import fingerprint_sources
+
+CORE_DIR = Path(__file__).resolve().parents[1] / "src" / "repro" / "core"
+
+
+# ------------------------------------------------------- per-rule fixtures
+BAD_SNIPPETS = {
+    "unseeded-random": "import random\n\ndef f():\n    return random.random()\n",
+    "unseeded-random-numpy": (
+        "import numpy as np\n\ndef f():\n    return np.random.rand()\n"),
+    "set-iteration": (
+        "def f():\n    out = []\n    for x in {1, 2, 3}:\n"
+        "        out.append(x)\n    return out\n"),
+    "set-iteration-keyed-sort": (
+        "def f(xs):\n    return sorted(set(xs), key=lambda v: v % 3)\n"),
+    "dict-popitem": "def f(d):\n    return d.popitem()\n",
+    "id-in-key": "def f(xs):\n    return sorted(xs, key=lambda v: id(v))\n",
+    "wallclock": "import time\n\ndef f():\n    return time.time()\n",
+    "wallclock-datetime": (
+        "import datetime\n\ndef f():\n    return datetime.datetime.now()\n"),
+    "uuid": "import uuid\n\ndef f():\n    return str(uuid.uuid4())\n",
+    "nan-json": "import json\n\ndef f(x):\n    return json.dumps(x)\n",
+}
+EXPECTED_RULE = {
+    "unseeded-random-numpy": "unseeded-random",
+    "set-iteration-keyed-sort": "set-iteration",
+    "wallclock-datetime": "wallclock",
+}
+
+
+@pytest.mark.parametrize("name", sorted(BAD_SNIPPETS))
+def test_each_determinism_lint_fires_exactly_once(name):
+    findings = scan_source(BAD_SNIPPETS[name], module=name)
+    rule = EXPECTED_RULE.get(name, name)
+    assert [f.rule for f in findings] == [rule], (
+        f"{name}: expected exactly one {rule!r} finding, got "
+        f"{[f.format() for f in findings]}")
+    (finding,) = findings
+    assert finding.context == "f"
+    assert finding.module == name
+
+
+GOOD_SNIPPETS = {
+    # Key-less sorted() over a set is a total order on distinct elements:
+    # ties cannot fall back to the salted-hash iteration order.
+    "total-sort": "def f(xs):\n    return sorted(set(xs))\n",
+    # Seeded generators are the blessed randomness source.
+    "seeded-rng": (
+        "import random\n\ndef f(seed):\n"
+        "    return random.Random(seed).random()\n"),
+    "numpy-generator": (
+        "import numpy as np\n\ndef f(seed):\n"
+        "    return np.random.default_rng(seed).random()\n"),
+    # Explicit allow_nan decision (either way) satisfies the JSON rule.
+    "json-allow-nan": (
+        "import json\n\ndef f(x):\n"
+        "    return json.dumps(x, allow_nan=False)\n"),
+    # Membership tests over sets are order-insensitive.
+    "set-membership": "def f(x, xs):\n    return x in set(xs)\n",
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOOD_SNIPPETS))
+def test_blessed_idioms_stay_clean(name):
+    assert scan_source(GOOD_SNIPPETS[name], module=name) == []
+
+
+# --------------------------------------------------------- baseline logic
+def _finding(rule="wallclock", module="m", context="c", line=1):
+    return Finding("determinism", rule, module, context, line, "msg")
+
+
+def test_baseline_suppresses_up_to_count_and_blocks_excess():
+    base = Baseline(entries={"wallclock::m::c": (1, "justified")})
+    report = apply_baseline([_finding(line=3), _finding(line=9)], base)
+    assert len(report.suppressed) == 1
+    assert len(report.blocking) == 1
+    assert not report.ok
+
+
+def test_baseline_with_empty_reason_blocks():
+    base = Baseline(entries={"wallclock::m::c": (1, "  ")})
+    report = apply_baseline([_finding()], base)
+    assert report.empty_reasons and not report.ok
+
+
+def test_stale_baseline_entry_is_reported_not_fatal():
+    base = Baseline(entries={"wallclock::gone::x": (1, "was fixed")})
+    report = apply_baseline([], base)
+    assert report.stale_keys == ["wallclock::gone::x"]
+    assert report.ok
+
+
+def test_non_baselinable_pass_cannot_be_suppressed():
+    fp = Finding("fingerprint", "under-coverage", "sweep", "des", 1, "msg")
+    base = Baseline(entries={fp.key: (1, "nice try")})
+    report = apply_baseline([fp], base)
+    assert report.blocking == [fp]
+
+
+# ------------------------------------------------------------ clean tree
+def test_clean_tree_cli_exits_zero(capsys):
+    assert main([]) == 0
+    out = capsys.readouterr().out
+    assert "0 blocking finding(s)" in out
+
+
+def test_clean_tree_has_no_protocol_findings():
+    assert check_protocols(CORE_DIR) == []
+
+
+def test_clean_tree_has_no_fingerprint_findings():
+    assert check_fingerprint_coverage(CORE_DIR) == []
+
+
+# ------------------------------------------------------- bridge assertions
+def test_fingerprint_table_equals_import_closure():
+    """The satellite bridge: ``_FINGERPRINT_SOURCES`` == computed closure.
+
+    If this fails, either a result-determining import was added (widen the
+    table — the cache must invalidate) or one was removed (narrow it, or
+    leave it as a safe over-approximation and update ENTRY_POINTS).
+    """
+    runtime = fingerprint_sources()
+    expected = expected_fingerprint_sources(CORE_DIR)
+    assert set(runtime) == set(expected)
+    for machine in sorted(expected):
+        assert set(runtime[machine]) == expected[machine], (
+            f"{machine}: _FINGERPRINT_SOURCES drifted from the import "
+            f"closure")
+
+
+def test_static_table_parse_matches_runtime_table():
+    static = load_fingerprint_table(CORE_DIR)
+    assert static == fingerprint_sources()
+
+
+def test_fingerprint_tuples_are_sorted_and_unique():
+    for machine, mods in fingerprint_sources().items():
+        assert sorted(set(mods)) == sorted(mods), machine
+
+
+# --------------------------------------------------------- mutation tests
+@pytest.fixture()
+def scratch_core(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    for src in CORE_DIR.glob("*.py"):
+        shutil.copy(src, core / src.name)
+    return core
+
+
+def _mutate(core, filename, old, new):
+    path = core / filename
+    text = path.read_text()
+    assert old in text, f"mutation anchor missing in {filename}: {old!r}"
+    path.write_text(text.replace(old, new, 1))
+
+
+def test_mutation_dropped_fingerprint_module_fails(scratch_core):
+    _mutate(scratch_core, "sweep.py", '"metrics"', '"metrics_gone"')
+    findings = check_fingerprint_coverage(scratch_core)
+    assert any(f.rule in ("under-coverage", "stale-entry") for f in findings)
+    assert main(["--core-dir", str(scratch_core)]) == 1
+
+
+def test_mutation_shadow_module_fails(scratch_core):
+    (scratch_core / "shadow_helper.py").write_text(
+        "from . import workload\n\n"
+        "def tweak(spec):\n    return workload.scaled_spec(spec, 2.0)\n")
+    findings = check_fingerprint_coverage(scratch_core)
+    assert any(f.rule == "unclassified-module" for f in findings)
+    assert main(["--core-dir", str(scratch_core)]) == 1
+
+
+def test_mutation_undeclared_predictor_use_fails(scratch_core):
+    _mutate(scratch_core, "policies.py",
+            "class SRTF(Policy):\n",
+            "class SRTF(Policy):\n    uses_predictor = False\n")
+    findings = check_policy_hints(scratch_core)
+    assert any(f.rule == "undeclared-predictor-use" for f in findings)
+    assert main(["--core-dir", str(scratch_core)]) == 1
+
+
+def test_mutation_unseeded_rng_fails(scratch_core):
+    path = scratch_core / "simulator.py"
+    path.write_text(path.read_text() +
+                    "\n\ndef _jitter():\n"
+                    "    import random\n"
+                    "    return random.random()\n")
+    findings = scan_determinism(scratch_core)
+    assert any(f.rule == "unseeded-random" and f.module == "simulator"
+               for f in findings)
+    assert main(["--core-dir", str(scratch_core)]) == 1
+
+
+def test_mutation_protocol_signature_drift_fails(scratch_core):
+    _mutate(scratch_core, "executor.py",
+            "def residency(self, key: str, sm: int)",
+            "def residency(self, key: str, lane: int)")
+    findings = check_machine_signatures(scratch_core)
+    assert any(f.rule == "signature-drift" for f in findings)
+    assert main(["--core-dir", str(scratch_core)]) == 1
+
+
+def test_clean_scratch_copy_passes(scratch_core):
+    """The scratch copy itself is clean — mutations, not copying, fail."""
+    assert main(["--core-dir", str(scratch_core)]) == 0

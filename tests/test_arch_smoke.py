@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES
-from repro.configs.shapes import all_cells, shape_applicable
+from repro.configs import ARCHS
+from repro.configs.shapes import all_cells
 from repro.models import lm
 
 ARCH_IDS = sorted(ARCHS)

@@ -13,11 +13,10 @@ from repro.core.events import ArrivalSource
 from repro.core.executor import ExecutorJob, LaneExecutor
 from repro.core.policies import make_policy
 from repro.core.scenarios import (
-    SCENARIOS,
     ClosedLoopScenario,
     MGkClosed,
+    SCENARIOS,
     ThinkTime,
-    executor_job,
     make_scenario,
     open_loop_names,
 )

@@ -7,13 +7,11 @@ proxy hides machine internals), and that the typed decision/event objects
 behave as documented.
 """
 
-import inspect
 from pathlib import Path
 
 import pytest
 
 from repro.core.events import (
-    Decision,
     Hold,
     IssueGrant,
     PreemptAtBoundary,

@@ -9,9 +9,9 @@ from pathlib import Path
 import pytest
 
 from repro.core.scenarios import (
-    SCENARIOS,
     Bursty,
     Diurnal,
+    SCENARIOS,
     Scenario,
     TraceReplay,
     fit_bursty_profile,

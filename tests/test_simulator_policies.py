@@ -24,7 +24,8 @@ def uniform_spec(name="u", blocks=120, residency=4, tpb=128, t=1000.0, **kw):
                       residency_beta=0.0, corunner_sens=0.0, **kw)
 
 
-FIFO = lambda: make_policy("fifo")
+def FIFO():
+    return make_policy("fifo")
 
 
 # ------------------------------------------------------------- conservation
@@ -126,7 +127,7 @@ def test_srtf_sampling_only_on_sample_sm():
     short = uniform_spec("short", blocks=60, residency=4, t=100.0)
     wl = [Arrival(long, 0.0, uid="long#0"), Arrival(short, 100.0, uid="short#1")]
     sim = Simulator(wl, make_policy("srtf"), n_sm=3, seed=0, record_trace=True)
-    res = sim.run()
+    sim.run()
     # The short kernel's first block must execute on the sampling SM (0).
     first = min((b for b in sim.trace if b.kernel == "short#1"),
                 key=lambda b: b.start)

@@ -11,7 +11,7 @@ import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import ARCHS, get_arch
-from repro.configs.shapes import InputShape, SHAPES
+from repro.configs.shapes import InputShape
 from repro.core.executor import ExecutorJob, LaneExecutor
 from repro.core.jobs import make_train_job
 from repro.core.policies import make_policy

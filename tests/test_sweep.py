@@ -9,9 +9,9 @@ import math
 import pytest
 
 from repro.core.metrics import MetricsError, geomean
+from repro.core.policies import make_policy
 from repro.core.scenarios import Scenario, TraceReplay, workload_digest
 from repro.core.simulator import simulate
-from repro.core.policies import make_policy
 from repro.core.sweep import (
     SweepSpec,
     clear_cache_memo,
