@@ -3,7 +3,7 @@ export PYTHONPATH := src
 
 .PHONY: analyze check check-all test test-all smoke smoke-sweep \
         smoke-sweep-closedloop smoke-sweep-executor golden \
-        bench bench-smoke
+        bench bench-smoke bench-compiled
 
 # Static determinism & cache-integrity analysis (DESIGN.md Section 9):
 # the three repro.analysis passes, then ruff (pyflakes/pycodestyle-errors/
@@ -63,6 +63,12 @@ bench:
 # uploaded as a per-commit artifact so the trajectory accumulates.
 bench-smoke:
 	$(PY) -m benchmarks.perf --smoke --jobs 2 --repeat 1
+
+# Compiled-engine slice of the perf lane (skips the slow python-engine
+# throughput rows; same JSON shape — the lane to iterate on while working
+# on the engine.  DESIGN.md Section 10).
+bench-compiled:
+	$(PY) -m benchmarks.perf --engine compiled
 
 check: test smoke
 

@@ -44,25 +44,32 @@ DEFAULT_CACHE_DIR = Path("artifacts") / "sweep_cache"
 JOBS = 1
 CACHE_DIR: Optional[Path] = DEFAULT_CACHE_DIR
 SUBSET: Optional[int] = None
+#: DES event-loop engine ("python"/"compiled"; None = compiled when a
+#: fast backend is available — see repro.core.fastsim.default_engine).
+ENGINE: Optional[str] = None
 
 _UNSET = object()
 
 
 def configure(jobs: Optional[int] = None, cache_dir=_UNSET,
-              subset=_UNSET) -> None:
-    """Set sweep parallelism / cache / workload-subset for this process.
+              subset=_UNSET, engine=_UNSET) -> None:
+    """Set sweep parallelism / cache / workload-subset / DES engine for
+    this process.
 
     ``cache_dir=None`` disables the on-disk cache; ``subset=N`` truncates
     every scenario's workload list to its first N entries (the CI smoke
-    uses this to keep sweep-runner coverage cheap).
+    uses this to keep sweep-runner coverage cheap); ``engine`` pins the
+    DES event loop (``None`` = compiled-when-available).
     """
-    global JOBS, CACHE_DIR, SUBSET
+    global JOBS, CACHE_DIR, SUBSET, ENGINE
     if jobs is not None:
         JOBS = max(1, int(jobs))
     if cache_dir is not _UNSET:
         CACHE_DIR = Path(cache_dir) if cache_dir is not None else None
     if subset is not _UNSET:
         SUBSET = int(subset) if subset is not None else None
+    if engine is not _UNSET:
+        ENGINE = engine
 
 
 class _SubsetScenario(Scenario):
@@ -128,6 +135,10 @@ def _build_spec(scenarios, policies, predictors=(None,), seeds=(SEED,),
         kwargs["n_sm"] = n_sm
     if time_scale is not None:
         kwargs["time_scale"] = time_scale
+    if machine == "des":
+        # The engine axis only exists for DES cells (SweepSpec rejects it
+        # on executor sweeps).
+        kwargs["engine"] = ENGINE
     return SweepSpec(scenarios=scenarios, policies=tuple(policies),
                      predictors=tuple(predictors), seeds=tuple(seeds),
                      until=until, machine=machine, **kwargs)
@@ -177,6 +188,7 @@ def run_workload(policy: str, wl: List[Arrival], seed: int = SEED,
     if policy in ("sjf", "ljf"):
         wl = reorder_for_oracle(wl, solo, longest_first=(policy == "ljf"))
         policy = "fifo"
+    sim_kwargs.setdefault("engine", ENGINE)
     return simulate(wl, lambda: make_policy(policy), seed=seed,
                     oracle_runtimes=solo, **sim_kwargs)
 

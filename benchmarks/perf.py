@@ -22,13 +22,22 @@ Workloads (full mode):
 ``--smoke`` keeps the lane shape but shrinks every workload (CI runs it
 per push and uploads the JSON as an artifact, so the perf trajectory
 accumulates).  The ``baseline`` block pins the measurements taken at the
-pre-fast-path commit with this same protocol on this container — the
-reference every later ``make bench`` compares against.
+PR-5 fast-path commit with this same protocol on this container — the
+reference every later ``make bench`` compares against; superseded
+baselines (the pre-fast-path interleaved measurements) are kept under
+``history`` so the whole trajectory stays readable from one file.
+
+Throughput rows run per engine: the reference Python event loop
+(``blocks_per_sec.<wl>``, comparable to the baseline block) and the
+compiled flat-array engine (``blocks_per_sec.<wl>.compiled``, with its
+``speedup_vs_baseline``); ``--engine`` restricts the lane to one of them
+(``make bench-compiled``).
 
 Usage::
 
     PYTHONPATH=src python -m benchmarks.perf [--smoke] [--jobs 4]
         [--out BENCH_des.json] [--repeat 2]
+        [--engine both|python|compiled]
 """
 
 from __future__ import annotations
@@ -42,30 +51,46 @@ import tempfile
 import time
 from pathlib import Path
 
+from repro.core.fastsim import FastSimulator, backend_name
 from repro.core.policies import make_policy
 from repro.core.scenarios import MGkClosed, NProgramMix
 from repro.core.simulator import Simulator, solo_runtime
 from repro.core.workload import Arrival, ERCBENCH, scaled_spec
 
-#: Reference measurements from the pre-fast-path commit (8244267), taken
-#: on this container with the exact protocol below, interleaved with the
-#: post-change runs (same CPU-contention regime; the shared-CPU container
-#: fluctuates +/-30%, so pre and post were alternated and the best —
-#: least-contended — observation of each series is recorded, 20 cold runs
-#: pre-side).  ``make bench`` rows are compared against these.
+#: Reference measurements from the PR-5 fast-path commit (db3228f) — the
+#: floor the compiled engine is measured against.  Taken from the
+#: BENCH_des.json that commit wrote on this container (best-of-3 under
+#: the protocol below; the shared-CPU container fluctuates +/-30%, so the
+#: best — least-contended — observation is the comparable one).
 BASELINE = {
-    "commit": "8244267",
-    "protocol": ("20 cold runs of the pre-fast-path commit interleaved "
-                 "with post-change runs; median and best (least-contended) "
-                 "observations recorded"),
-    "table5.cold.jobs4.wall_s.median": 56.2,
-    "table5.cold.jobs4.wall_s.best": 48.9,
-    "table5.warm.jobs4.wall_s.median": 1.49,
-    "table5.warm.jobs4.wall_s.best": 1.44,
-    "blocks_per_sec.table5_pair": 17_947.0,
-    "blocks_per_sec.mix4_10x": 31_304.0,
-    "blocks_per_sec.mgk_saturated": 4_267.0,
+    "commit": "db3228f",
+    "protocol": ("best-of-3 measurements recorded by `make bench` at the "
+                 "PR-5 fast-path commit (python engine, this container); "
+                 "best = least-contended observation"),
+    "table5.cold.jobs4.wall_s.best": 17.87,
+    "table5.warm.jobs4.wall_s.best": 0.83,
+    "blocks_per_sec.table5_pair": 40_372.8,
+    "blocks_per_sec.mix4_10x": 101_710.1,
+    "blocks_per_sec.mgk_saturated": 8_887.5,
 }
+
+#: Superseded baseline blocks, oldest first (each was ``BASELINE`` for a
+#: span of commits; re-baselining moves the old block here).
+HISTORY = [
+    {
+        "commit": "8244267",
+        "protocol": ("20 cold runs of the pre-fast-path commit interleaved "
+                     "with post-change runs; median and best "
+                     "(least-contended) observations recorded"),
+        "table5.cold.jobs4.wall_s.median": 56.2,
+        "table5.cold.jobs4.wall_s.best": 48.9,
+        "table5.warm.jobs4.wall_s.median": 1.49,
+        "table5.warm.jobs4.wall_s.best": 1.44,
+        "blocks_per_sec.table5_pair": 17_947.0,
+        "blocks_per_sec.mix4_10x": 31_304.0,
+        "blocks_per_sec.mgk_saturated": 4_267.0,
+    },
+]
 
 
 def _git_commit() -> str:
@@ -90,12 +115,27 @@ def _blocks(sim: Simulator) -> int:
     return sum(run.done for run in sim.runs.values())
 
 
-def _throughput(label: str, build, repeat: int) -> dict:
-    """Best-of-``repeat`` blocks/sec for one simulation builder."""
+#: Engine name -> simulator class for the throughput rows.
+_SIM_CLS = {"python": Simulator, "compiled": FastSimulator}
+
+
+def _engine_label(engine: str) -> str:
+    return "python" if engine == "python" else f"compiled-{backend_name()}"
+
+
+def _throughput(label: str, build, repeat: int, engine: str,
+                smoke: bool) -> dict:
+    """Best-of-``repeat`` blocks/sec for one simulation builder.
+
+    The python-engine row keeps the bare ``blocks_per_sec.<label>`` name
+    (continuous with the whole trajectory); the compiled-engine row is
+    ``.compiled``-suffixed and carries its speedup against the baseline
+    block's python-engine floor.
+    """
     best = None
     blocks = 0
     for _ in range(repeat):
-        sim, until = build()
+        sim, until = build(_SIM_CLS[engine])
         t0 = time.perf_counter()
         sim.run(until=until)
         dt = time.perf_counter() - t0
@@ -103,52 +143,64 @@ def _throughput(label: str, build, repeat: int) -> dict:
         rate = blocks / dt if dt > 0 else float("inf")
         if best is None or rate > best:
             best = rate
-    return {"name": f"blocks_per_sec.{label}", "blocks": blocks,
-            "blocks_per_sec": round(best, 1)}
+    name = f"blocks_per_sec.{label}"
+    row = {"name": name if engine == "python" else f"{name}.compiled",
+           "blocks": blocks, "blocks_per_sec": round(best, 1),
+           "engine": _engine_label(engine)}
+    base = None if smoke else BASELINE.get(name)
+    if base:
+        row["speedup_vs_baseline"] = round(best / base, 2)
+    return row
 
 
-def _throughput_rows(smoke: bool, repeat: int) -> list:
+def _throughput_rows(smoke: bool, repeat: int, engines) -> list:
     scale = 1 if smoke else 10
     solos = {name: solo_runtime(spec, lambda: make_policy("fifo"))
              for name, spec in ERCBENCH.items()}
 
-    def pair():
+    def pair(cls):
         names = ("JPEG-d", "SAD") if smoke else ("SHA1", "SAD")
         arrivals = [Arrival(ERCBENCH[names[0]], 0.0, uid=f"{names[0]}#0"),
                     Arrival(ERCBENCH[names[1]], 100.0, uid=f"{names[1]}#1")]
-        return Simulator(arrivals, make_policy("srtf-adaptive"),
-                         oracle_runtimes=solos), None
+        return cls(arrivals, make_policy("srtf-adaptive"),
+                   oracle_runtimes=solos), None
 
     #: 10x-scaled four-program mix: the Section-6-scale shape the ISSUE's
     #: load-curve story needs (each spec's grid is 10x the Table-2 one).
     big = {n: scaled_spec(s, num_blocks=s.num_blocks * scale)
            for n, s in ERCBENCH.items() if n != "SHA1"}
 
-    def mix():
+    def mix(cls):
         scn = NProgramMix(seed=0, names=sorted(big), specs=big,
                           n_programs=4, n_workloads=1)
         (_, arrivals), = scn.workloads()
-        return Simulator(arrivals, make_policy("srtf"),
-                         oracle_runtimes=solos), None
+        return cls(arrivals, make_policy("srtf"),
+                   oracle_runtimes=solos), None
 
-    def mgk():
+    def mgk(cls):
         scn = MGkClosed(seed=0, n_total=(8 if smoke else 60),
                         mean_interarrival=20_000.0, population=8)
-        sim = Simulator([], make_policy("srtf-adaptive"),
-                        oracle_runtimes=solos)
+        sim = cls([], make_policy("srtf-adaptive"),
+                  oracle_runtimes=solos)
         sim.attach_arrival_source(scn.make_process(scn.process_names()[0]))
         return sim, None
 
-    return [
-        _throughput("table5_pair", pair, repeat),
-        _throughput("mix4_10x" if not smoke else "mix4", mix, repeat),
-        _throughput("mgk_saturated", mgk, repeat),
-    ]
+    rows = []
+    for engine in engines:
+        rows += [
+            _throughput("table5_pair", pair, repeat, engine, smoke),
+            _throughput("mix4_10x" if not smoke else "mix4", mix, repeat,
+                        engine, smoke),
+            _throughput("mgk_saturated", mgk, repeat, engine, smoke),
+        ]
+    return rows
 
 
-def _sweep_rows(smoke: bool, jobs: int, repeat: int) -> list:
+def _sweep_rows(smoke: bool, jobs: int, repeat: int,
+                engine: str = "auto") -> list:
     """Cold + warm wall time of the flagship table5 sweep, exactly as the
-    benchmark driver runs it (``benchmarks.run table5 --jobs N``).
+    benchmark driver runs it (``benchmarks.run table5 --jobs N``) — under
+    ``engine`` (``auto`` = the driver's compiled-when-available default).
 
     Each phase is measured ``repeat`` times and the best run is recorded
     (the container's CPU allocation fluctuates; the least-contended
@@ -160,7 +212,8 @@ def _sweep_rows(smoke: bool, jobs: int, repeat: int) -> list:
 
     def one_pass(cache_dir: Path) -> float:
         argv = [sys.executable, "-m", "benchmarks.run", "table5",
-                "--jobs", str(jobs), "--cache-dir", str(cache_dir)]
+                "--jobs", str(jobs), "--cache-dir", str(cache_dir),
+                "--engine", engine]
         if smoke:
             argv += ["--subset", "4"]
         t0 = time.perf_counter()
@@ -188,29 +241,37 @@ def _sweep_rows(smoke: bool, jobs: int, repeat: int) -> list:
             shutil.rmtree(warm_dir, ignore_errors=True)
     for phase, wall in (("cold", cold), ("warm", warm)):
         row = {"name": f"table5.{phase}.jobs{jobs}",
-               "wall_s": round(wall, 2), "best_of": repeat}
+               "wall_s": round(wall, 2), "best_of": repeat,
+               # "auto" resolves the same way in the subprocess as here:
+               # compiled unless only the interpreted twin is available.
+               "engine": ("python"
+                          if engine == "python" or backend_name() == "interp"
+                          else _engine_label("compiled"))}
         if not smoke:
-            median = BASELINE.get(f"table5.{phase}.jobs{jobs}.wall_s.median")
             best = BASELINE.get(f"table5.{phase}.jobs{jobs}.wall_s.best")
-            if median is not None:
-                row["pre_pr_wall_s_median"] = median
-                row["speedup_vs_pre_pr_median"] = round(median / wall, 2)
             if best is not None:
-                row["pre_pr_wall_s_best"] = best
-                row["speedup_vs_pre_pr_best"] = round(best / wall, 2)
+                row["baseline_wall_s_best"] = best
+                row["speedup_vs_baseline_best"] = round(best / wall, 2)
         rows.append(row)
     return rows
 
 
 def run(smoke: bool = False, jobs: int = 4, repeat: int = 2,
-        out: Path = Path("BENCH_des.json")) -> dict:
-    rows = _throughput_rows(smoke, repeat)
-    rows += _sweep_rows(smoke, jobs, repeat)
+        out: Path = Path("BENCH_des.json"), engine: str = "both") -> dict:
+    engines = ("python", "compiled") if engine == "both" else (engine,)
+    rows = _throughput_rows(smoke, repeat, engines)
+    # The sweep lane drives benchmarks.run, whose default is the compiled
+    # engine when a fast backend exists; pin python only when this whole
+    # lane is pinned to it.
+    rows += _sweep_rows(smoke, jobs, repeat,
+                        engine=("python" if engine == "python" else "auto"))
     payload = {
         "commit": _git_commit(),
         "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "smoke": smoke,
+        "compiled_backend": backend_name(),
         "baseline": dict(BASELINE),
+        "history": [dict(block) for block in HISTORY],
         "rows": rows,
     }
     out.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
@@ -225,13 +286,17 @@ def main() -> None:
     ap.add_argument("--repeat", type=int, default=2,
                     help="best-of-N for the throughput rows")
     ap.add_argument("--out", default="BENCH_des.json")
+    ap.add_argument("--engine", choices=("both", "python", "compiled"),
+                    default="both",
+                    help="restrict the throughput rows to one DES engine "
+                         "(make bench-compiled uses 'compiled')")
     args = ap.parse_args()
     if args.repeat < 1:
         ap.error("--repeat must be >= 1")
     if args.jobs < 1:
         ap.error("--jobs must be >= 1")
     payload = run(smoke=args.smoke, jobs=args.jobs, repeat=args.repeat,
-                  out=Path(args.out))
+                  out=Path(args.out), engine=args.engine)
     for row in payload["rows"]:
         print(json.dumps(row, sort_keys=True))
     print(f"wrote {args.out} @ {payload['commit']}")

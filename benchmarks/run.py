@@ -13,13 +13,19 @@ Sweep-shaped modules execute through :mod:`repro.core.sweep`:
 * ``--subset N``    — first N workloads of each scenario (CI smoke),
 * ``--machine M``   — only run modules driving this machine (``des`` for
   the discrete-event simulator, ``executor`` for the real-JAX lane
-  executor; default both).
+  executor; default both),
+* ``--engine E``    — DES event-loop engine for the simulations
+  (``python`` = reference loop, ``compiled`` = flat-array engine,
+  ``auto`` = compiled when a fast backend is available; default auto).
+  The resolved engine is echoed in the run header so BENCH rows are
+  attributable.
 
 Usage::
 
     PYTHONPATH=src python -m benchmarks.run [module-substring ...] \
         [--jobs 4] [--cache-dir artifacts/sweep_cache | --no-cache] \
-        [--subset 4] [--machine des|executor]
+        [--subset 4] [--machine des|executor] \
+        [--engine auto|python|compiled]
 """
 
 from __future__ import annotations
@@ -66,17 +72,29 @@ def main() -> None:
     ap.add_argument("--machine", choices=("des", "executor", "all"),
                     default="all",
                     help="only run modules driving this machine")
+    ap.add_argument("--engine", choices=("auto", "python", "compiled"),
+                    default="auto",
+                    help="DES event-loop engine (auto = compiled when a "
+                         "fast backend is available)")
     args = ap.parse_args()
 
+    from repro.core.fastsim import default_engine, engine_token
+
     from benchmarks import common
+
+    engine = None if args.engine == "auto" else args.engine
     if args.no_cache:
-        common.configure(jobs=args.jobs, cache_dir=None, subset=args.subset)
+        common.configure(jobs=args.jobs, cache_dir=None, subset=args.subset,
+                         engine=engine)
     elif args.cache_dir is not None:
         common.configure(jobs=args.jobs, cache_dir=args.cache_dir,
-                         subset=args.subset)
+                         subset=args.subset, engine=engine)
     else:
-        common.configure(jobs=args.jobs, subset=args.subset)
+        common.configure(jobs=args.jobs, subset=args.subset, engine=engine)
 
+    # Attributability header: which event loop produced the rows below
+    # (the token also names the active compiled backend).
+    print(f"# engine={args.engine} -> {engine_token(engine or default_engine())}")
     print("name,us_per_call,derived")
     failures = 0
     for modname, machine in MODULES:

@@ -663,12 +663,33 @@ def simulate(
     predictor: Union[str, Predictor, None] = None,
     until: Optional[float] = None,
     arrival_source=None,
+    engine: Optional[str] = None,
 ) -> SimResult:
     """Run one simulation.  ``arrival_source`` attaches a closed-loop
     :class:`~repro.core.events.ArrivalSource` (completion-driven arrivals;
     typically with ``arrivals=[]`` so the source supplies the initial
-    ones)."""
-    sim = Simulator(
+    ones).
+
+    ``engine`` selects the event-loop implementation: ``"python"`` runs
+    the reference loop below, ``"compiled"`` the bit-identical flat-array
+    engine (:class:`repro.core.fastsim.FastSimulator`; DESIGN.md
+    Section 10), and ``None`` — the default — uses the compiled engine
+    exactly when a fast backend is available
+    (:func:`repro.core.fastsim.default_engine`).  The imports are lazy so
+    the reference module never depends on the engine at import time.
+    """
+    if engine is None:
+        from .fastsim import default_engine
+        engine = default_engine()
+    if engine == "compiled":
+        from .fastsim import FastSimulator
+        sim_cls = FastSimulator
+    elif engine == "python":
+        sim_cls = Simulator
+    else:
+        raise ValueError(
+            f"unknown engine {engine!r}; choose from ('python', 'compiled')")
+    sim = sim_cls(
         arrivals, policy_factory(), n_sm=n_sm, seed=seed,
         record_trace=record_trace, record_predictions=record_predictions,
         oracle_runtimes=oracle_runtimes, predictor=predictor)

@@ -80,6 +80,7 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .executor import solo_runtime_executor
+from .fastsim import default_engine, engine_token
 from .metrics import (
     MetricsError,
     QueueingMetrics,
@@ -108,10 +109,17 @@ from .workload import Arrival, KernelSpec, N_SM, reorder_for_oracle
 #: (Schedule-changing *commits* are caught automatically by the code
 #: fingerprint in every key — see :func:`_code_fingerprint`; this constant
 #: remains the manual override.)
-CACHE_VERSION = 1
+#: 2: DES cell keys fold in the engine token (compiled flat-array engine,
+#:    DESIGN.md Section 10) and the "des"/"des-closed" fingerprints widen
+#:    to the engine sources.
+CACHE_VERSION = 2
 
 #: The two concrete machines a sweep can target.
 MACHINES = ("des", "executor")
+
+#: The two DES event-loop engines a sweep can pin (``None`` = pick the
+#: compiled engine exactly when a fast backend is available).
+ENGINES = ("python", "compiled")
 
 #: Policies realized as FIFO over an oracle-reordered arrival list.
 ORACLE_ORDER_POLICIES = ("sjf", "ljf")
@@ -136,6 +144,15 @@ class SweepSpec:
     simulator) or ``"executor"`` (real-JAX lane executor; ``n_sm`` is then
     the lane count and ``time_scale`` maps scenario cycles to seconds of
     arrival time — see :func:`repro.core.scenarios.executor_workload`).
+
+    ``engine`` pins the DES event-loop implementation (``"python"`` /
+    ``"compiled"``; ``None`` = compiled-when-available).  Both engines are
+    gated bit-identical, but every DES cell key folds in the resolved
+    engine token — :func:`repro.core.fastsim.engine_token`, which also
+    encodes which compiled backend (native C / numba / interpreted twin)
+    is active — so a gating regression could never silently mix
+    provenance across cached records.  Executor sweeps reject the axis:
+    their cells never run the DES event loop.
     """
 
     scenarios: Tuple[Union[str, Scenario], ...]
@@ -146,6 +163,7 @@ class SweepSpec:
     until: Optional[float] = None
     machine: str = "des"
     time_scale: float = DEFAULT_EXECUTOR_TIME_SCALE
+    engine: Optional[str] = None
 
     def __post_init__(self):
         object.__setattr__(self, "scenarios", tuple(self.scenarios))
@@ -155,6 +173,14 @@ class SweepSpec:
         if self.machine not in MACHINES:
             raise ValueError(
                 f"unknown machine {self.machine!r}; choose from {MACHINES}")
+        if self.engine is not None:
+            if self.engine not in ENGINES:
+                raise ValueError(f"unknown engine {self.engine!r}; choose "
+                                 f"from {ENGINES} (or None = auto)")
+            if self.machine == "executor":
+                raise ValueError(
+                    "engine selects the DES event loop; executor sweeps "
+                    "have no engine axis (leave it as None)")
 
 
 @dataclass(frozen=True)
@@ -339,14 +365,19 @@ def _canonical_digest(payload: dict) -> str:
 #: the ExecutorJob bridge import), which is the safe direction for a
 #: cache key.
 _FINGERPRINT_SOURCES: Dict[str, Tuple[str, ...]] = {
+    # fastsim/fastsim_c/fastsim_twin: the compiled event-loop engine
+    # (DESIGN.md Section 10) is reachable from simulate()'s lazy engine
+    # selection, and although it is gated bit-identical to the reference
+    # loop, an edit to it must invalidate DES cells — under-invalidation
+    # would silently serve records produced by unvetted engine code.
     "des": ("simulator", "machine", "events", "policies", "predictor",
-            "workload", "metrics"),
+            "workload", "metrics", "fastsim", "fastsim_c", "fastsim_twin"),
     # Closed-loop DES cells additionally depend on scenarios.py: the
     # arrival *process* code (not a materialized list) determines what the
     # cell simulates, so an edit to it must invalidate those cells.
     "des-closed": ("simulator", "machine", "events", "policies",
                    "predictor", "workload", "metrics", "scenarios",
-                   "executor"),
+                   "executor", "fastsim", "fastsim_c", "fastsim_twin"),
     "executor": ("executor", "machine", "events", "policies", "predictor",
                  "workload", "metrics", "scenarios"),
 }
@@ -504,7 +535,8 @@ def _cell_key(arrivals: Sequence[Arrival], policy: str, predictor: str,
               seed: int, n_sm: int, until: Optional[float],
               solo: Dict[str, float], machine: str = "des",
               nonce: Optional[str] = None,
-              time_scale: Optional[float] = None) -> str:
+              time_scale: Optional[float] = None,
+              engine: Optional[str] = None) -> str:
     # The workload content enters through scenarios.workload_digest — the
     # one canonical payload (spec fields + times + uids) shared with tests
     # and documentation.
@@ -515,6 +547,11 @@ def _cell_key(arrivals: Sequence[Arrival], policy: str, predictor: str,
         "policy": policy, "predictor": predictor, "seed": seed,
         "n_sm": n_sm, "until": until, "solo": solo,
     }
+    if machine == "des":
+        # The resolved engine token ("python" / "compiled-native" / ...)
+        # also fingerprints numba/native availability — bit-identity is
+        # gated, but provenance must never silently mix across records.
+        payload["engine"] = engine_token(engine)
     if machine == "executor":
         # Executor cells are wall-clock measurements: the nonce makes every
         # run_sweep invocation re-measure (no cross-run hit pretending
@@ -529,7 +566,8 @@ def _closed_cell_key(scn: ClosedLoopScenario, wl_name: str, policy: str,
                      predictor: str, seed: int, n_sm: int,
                      until: Optional[float], solo: Dict[str, float],
                      machine: str = "des", nonce: Optional[str] = None,
-                     time_scale: Optional[float] = None) -> str:
+                     time_scale: Optional[float] = None,
+                     engine: Optional[str] = None) -> str:
     # Closed-loop cells have no materialized arrival list to digest: the
     # key digests the *process parameters* + seed instead (the process +
     # the machine's deterministic completions fully determine the
@@ -545,6 +583,8 @@ def _closed_cell_key(scn: ClosedLoopScenario, wl_name: str, policy: str,
         "policy": policy, "predictor": predictor, "seed": seed,
         "n_sm": n_sm, "until": until, "solo": solo,
     }
+    if machine == "des":
+        payload["engine"] = engine_token(engine)
     if machine == "executor":
         payload["measured"] = True
         payload["nonce"] = nonce
@@ -591,6 +631,7 @@ def _run_des_cell(payload: dict) -> dict:
         predictor=payload["predictor"],
         until=payload["until"],
         arrival_source=source,
+        engine=payload.get("engine"),
     )
     solo_by_key = {k: solo[res.name[k]] for k in res.turnaround}
     window = evaluate_window(
@@ -811,6 +852,11 @@ def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
     # determinism finding (uuid): the nonce exists precisely to be unique
     # per run; it uniquifies keys and never shapes a result.
     nonce = uuid.uuid4().hex if on_executor else None
+    # Resolve the engine axis once per spec: the resolved name goes into
+    # every worker payload and its token into every DES cell key, so a
+    # spec run under "auto" on two hosts with different backends can never
+    # share records across engine provenance.
+    engine = None if on_executor else (spec.engine or default_engine())
 
     worklist, solo_specs = _materialize(spec)
     solo_memo, solo_stats = _measure_solos(solo_specs, spec, jobs, cache_dir)
@@ -843,12 +889,13 @@ def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
                         scn, wl_name, eff_policy, pred_name, seed,
                         spec.n_sm, spec.until, wl_solo,
                         machine=spec.machine, nonce=nonce,
-                        time_scale=spec.time_scale)
+                        time_scale=spec.time_scale, engine=engine)
                 else:
                     key = _cell_key(eff_arrivals, eff_policy, pred_name,
                                     seed, spec.n_sm, spec.until, wl_solo,
                                     machine=spec.machine, nonce=nonce,
-                                    time_scale=spec.time_scale)
+                                    time_scale=spec.time_scale,
+                                    engine=engine)
                 ordered.append((key, {
                     "scenario": scn.name, "workload": wl_name,
                     "policy": policy, "predictor": pred_name,
@@ -874,6 +921,7 @@ def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
                     "machine": spec.machine,
                     "time_scale": spec.time_scale,
                     "cache_dir": cache_dir,
+                    "engine": engine,
                 }
                 if closed:
                     payload["closed_loop"] = True
@@ -886,6 +934,7 @@ def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
             "cells": len(ordered), "cache_hits": hits,
             "computed": queued, "deduplicated": dedup,
             "jobs": jobs, "machine": spec.machine,
+            "engine": None if engine is None else engine_token(engine),
             **solo_stats,
         },
     }
@@ -964,6 +1013,7 @@ __all__ = [
     "CACHE_VERSION",
     "CellResult",
     "clear_cache_memo",
+    "ENGINES",
     "fingerprint_sources",
     "MACHINES",
     "MetricsCI",

@@ -198,6 +198,17 @@ def test_mutation_dropped_fingerprint_module_fails(scratch_core):
     assert main(["--core-dir", str(scratch_core)]) == 1
 
 
+def test_mutation_dropped_engine_module_fails(scratch_core):
+    """ISSUE 7 satellite: the compiled-engine sources are fingerprinted for
+    the DES machines — dropping one from the table must turn the CLI red
+    (under-coverage: engine edits would serve stale cached schedules)."""
+    _mutate(scratch_core, "sweep.py", '"fastsim_c"', '"fastsim_c_gone"')
+    findings = check_fingerprint_coverage(scratch_core)
+    assert any(f.rule == "under-coverage" and f.module == "fastsim_c"
+               for f in findings)
+    assert main(["--core-dir", str(scratch_core)]) == 1
+
+
 def test_mutation_shadow_module_fails(scratch_core):
     (scratch_core / "shadow_helper.py").write_text(
         "from . import workload\n\n"

@@ -1,0 +1,347 @@
+"""Compiled-engine equivalence suite (DESIGN.md Section 10).
+
+The compiled DES engine (:mod:`repro.core.fastsim`) is contractually
+**byte-identical** to the reference ``Simulator.run`` across all three of
+its backends — generated C (``native``), numba-jitted twin (``numba``)
+and the interpreted twin (``interp``, the always-importable fallback).
+This suite enforces the contract per backend:
+
+* the full fast-vs-reference matrix of test_fastpath.py — scenarios x
+  policies x predictors x open/truncated/closed-loop — runs every cell on
+  :class:`~repro.core.fastsim.FastSimulator` (backend pinned) against the
+  reference loop and asserts the complete observable surface is
+  identical, including the decision log call-for-call;
+* a golden-trace subset pins each backend to the seed schedules in the
+  fast tier (the full 32-cell golden sweep runs both engines in the slow
+  tier, tests/test_golden_traces.py);
+* unsupported configurations (custom policy wrappers) transparently fall
+  back to the reference loop;
+* importing the engine never hard-requires numba, ``REPRO_NO_NUMBA=1``
+  forces the numba backend off, and the sweep cache folds the resolved
+  engine token into every DES cell key.
+
+CI additionally reruns this file with ``REPRO_NO_NUMBA=1`` and
+``REPRO_NO_NATIVE=1`` so the pure-NumPy fallback path is gated on every
+push even on hosts where a faster backend exists.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import fastsim_twin as tw
+from repro.core.fastsim import (
+    FastSimulator,
+    _native_advance,
+    backend_name,
+    default_engine,
+    engine_token,
+)
+from repro.core.policies import make_policy
+from repro.core.scenarios import MGkClosed
+from repro.core.simulator import Simulator, simulate
+from repro.core.sweep import SweepSpec, _cell_key
+from repro.core.workload import TABLE3_RUNTIME
+
+from make_golden_traces import _arrivals, trace_fingerprint
+from test_fastpath import N_SM, ORACLE, SEED, TINY, WORKLOADS
+
+REPO = Path(__file__).resolve().parents[1]
+
+#: Every registered policy, incl. the oracle-order pair the sweeps realize
+#: as FIFO — the engine must also handle them when driven directly.
+ALL_POLICIES = ("fifo", "fifo-cap", "sjf", "ljf", "mpmax", "srtf",
+                "srtf-adaptive", "srtf-zero")
+
+
+def _backend_params():
+    """One pytest param per engine backend, skipping the unavailable ones
+    visibly (``REPRO_NO_NATIVE``/``REPRO_NO_NUMBA`` turn these into skips
+    — the CI fallback tier runs the matrix on the interpreted twin)."""
+    return [
+        pytest.param("interp", id="interp"),
+        pytest.param("native", id="native",
+                     marks=pytest.mark.skipif(
+                         _native_advance() is None,
+                         reason="no C toolchain / REPRO_NO_NATIVE=1")),
+        pytest.param("numba", id="numba",
+                     marks=pytest.mark.skipif(
+                         not tw.NUMBA_AVAILABLE,
+                         reason="numba not importable")),
+    ]
+
+
+BACKENDS = _backend_params()
+
+
+def _run(cls, arrivals, policy, *, predictor=None, until=None,
+         source_fn=None, **kwargs):
+    sim = cls(arrivals, make_policy(policy), n_sm=N_SM, seed=SEED,
+              record_trace=True, record_predictions=True,
+              record_decisions=True, oracle_runtimes=dict(ORACLE),
+              predictor=predictor, **kwargs)
+    if source_fn is not None:
+        sim.attach_arrival_source(source_fn())
+    res = sim.run(until=until)
+    return sim, res
+
+
+#: Reference-side results are engine-independent — compute each cell once
+#: and share it across the per-backend parametrizations.
+_REF_MEMO = {}
+
+
+def _reference(cell_id, arrivals, policy, **kwargs):
+    if cell_id not in _REF_MEMO:
+        _REF_MEMO[cell_id] = _run(Simulator, arrivals, policy, **kwargs)
+    return _REF_MEMO[cell_id]
+
+
+def _assert_identical(fast, ref):
+    sim_f, res_f = fast
+    sim_r, res_r = ref
+    assert res_f.turnaround == res_r.turnaround
+    assert res_f.finish == res_r.finish
+    assert res_f.arrival == res_r.arrival
+    assert res_f.unfinished == res_r.unfinished
+    assert res_f.end_time == res_r.end_time
+    assert res_f.makespan == res_r.makespan
+    assert res_f.utilization == res_r.utilization
+    assert sim_f.busy_time == sim_r.busy_time
+    assert ([dataclasses.astuple(r) for r in sim_f.trace]
+            == [dataclasses.astuple(r) for r in sim_r.trace])
+    assert ([dataclasses.astuple(p) for p in sim_f.predictions]
+            == [dataclasses.astuple(p) for p in sim_r.predictions])
+    assert sim_f.decisions == sim_r.decisions
+
+
+# -------------------------------------------------------------- the matrix
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("workload", sorted(WORKLOADS))
+def test_engine_identical_open_loop(workload, policy, backend):
+    arrivals = WORKLOADS[workload]
+    _assert_identical(
+        _run(FastSimulator, arrivals, policy, backend=backend),
+        _reference(("open", workload, policy), arrivals, policy))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("predictor", ("simple-slicing", "ewma"))
+@pytest.mark.parametrize("policy", ("srtf", "srtf-adaptive"))
+def test_engine_identical_across_predictors(policy, predictor, backend):
+    arrivals = WORKLOADS["mix4"]
+    _assert_identical(
+        _run(FastSimulator, arrivals, policy, predictor=predictor,
+             backend=backend),
+        _reference(("pred", policy, predictor), arrivals, policy,
+                   predictor=predictor))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_engine_identical_truncated(policy, backend):
+    arrivals = WORKLOADS["poisson"]
+    _assert_identical(
+        _run(FastSimulator, arrivals, policy, until=4_000.0,
+             backend=backend),
+        _reference(("until", policy), arrivals, policy, until=4_000.0))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_engine_identical_closed_loop(policy, backend):
+    scn = MGkClosed(seed=SEED, names=sorted(TINY), specs=TINY, n_total=10,
+                    mean_interarrival=1_500.0, population=3)
+    name = scn.process_names()[0]
+
+    def source_fn():
+        return scn.make_process(name)
+
+    _assert_identical(
+        _run(FastSimulator, [], policy, source_fn=source_fn,
+             backend=backend),
+        _reference(("closed", policy), [], policy, source_fn=source_fn))
+
+
+# ------------------------------------------------------------ golden gate
+_GOLDEN = json.loads(
+    (Path(__file__).parent / "data" / "golden_traces.json").read_text())
+
+#: A deterministic spread of golden cells for the fast tier (the full
+#: 32-cell sweep is slow-marked in tests/test_golden_traces.py).
+_GOLDEN_SUBSET = sorted(_GOLDEN["cells"])[::7]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("cell", _GOLDEN_SUBSET)
+def test_golden_subset_identical_to_seed(cell, backend):
+    workload, policy = cell.split("/")
+    expected = _GOLDEN["cells"][cell]
+    sim = FastSimulator(
+        _arrivals(_GOLDEN["workloads"][workload]), make_policy(policy),
+        seed=_GOLDEN["seed"], record_trace=True,
+        oracle_runtimes=dict(TABLE3_RUNTIME), backend=backend)
+    res = sim.run()
+    assert ({k: round(v, 4) for k, v in res.finish.items()}
+            == expected["finish"])
+    assert round(res.makespan, 4) == expected["makespan"]
+    assert len(sim.trace) == expected["n_blocks"]
+    assert trace_fingerprint(sim.trace) == expected["trace_crc32"]
+
+
+# ------------------------------------------------------------- fallback
+class _WrappedFIFO:
+    """Duck-typed policy wrapper — NOT a registered exact type, so the
+    engine must take the reference path (fallback contract)."""
+
+    def __init__(self):
+        self.inner = make_policy("fifo")
+        self.unlimited_caps = type(self.inner).unlimited_caps
+        self.uniform_caps = type(self.inner).uniform_caps
+        self.uses_predictor = type(self.inner).uses_predictor
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_unsupported_policy_falls_back_to_reference():
+    arrivals = WORKLOADS["pair"]
+    fast = FastSimulator(arrivals, _WrappedFIFO(), n_sm=N_SM, seed=SEED,
+                         record_trace=True, oracle_runtimes=dict(ORACLE))
+    assert not fast._engine_supported()
+    res_f = fast.run()
+    ref = Simulator(arrivals, make_policy("fifo"), n_sm=N_SM, seed=SEED,
+                    record_trace=True, oracle_runtimes=dict(ORACLE))
+    res_r = ref.run()
+    assert res_f.finish == res_r.finish
+    assert ([dataclasses.astuple(r) for r in fast.trace]
+            == [dataclasses.astuple(r) for r in ref.trace])
+
+
+def test_slow_path_simulator_falls_back_to_reference():
+    arrivals = WORKLOADS["pair"]
+    fast = FastSimulator(arrivals, make_policy("fifo"), n_sm=N_SM,
+                         seed=SEED, oracle_runtimes=dict(ORACLE),
+                         fast_path=False)
+    assert not fast._engine_supported()
+    res_f = fast.run()
+    res_r = Simulator(arrivals, make_policy("fifo"), n_sm=N_SM, seed=SEED,
+                      oracle_runtimes=dict(ORACLE), fast_path=False).run()
+    assert res_f.finish == res_r.finish
+
+
+# ------------------------------------------------------ engine selection
+def test_simulate_engine_selector():
+    arrivals = WORKLOADS["pair"]
+    kw = dict(n_sm=N_SM, seed=SEED, oracle_runtimes=dict(ORACLE))
+    ref = simulate(arrivals, lambda: make_policy("srtf"), engine="python",
+                   **kw)
+    eng = simulate(arrivals, lambda: make_policy("srtf"), engine="compiled",
+                   **kw)
+    auto = simulate(arrivals, lambda: make_policy("srtf"), **kw)
+    assert type(ref.sim) is Simulator
+    assert type(eng.sim) is FastSimulator
+    assert eng.finish == ref.finish == auto.finish
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate(arrivals, lambda: make_policy("srtf"), engine="cuda", **kw)
+
+
+def test_default_engine_and_token_are_consistent():
+    backend = backend_name()
+    assert backend in ("native", "numba", "interp")
+    # The interpreted twin is slower than the reference loop: it must
+    # never become the default (ISSUE 7 fallback contract).
+    expected = "python" if backend == "interp" else "compiled"
+    assert default_engine() == expected
+    assert engine_token("python") == "python"
+    assert engine_token("compiled") == f"compiled-{backend}"
+
+
+def test_sweep_keys_fold_engine_token():
+    arrivals = WORKLOADS["pair"]
+    solo = {"A": ORACLE["A"], "B": ORACLE["B"]}
+    keys = {
+        engine: _cell_key(arrivals, "fifo", "ss", SEED, N_SM, None, solo,
+                          engine=engine)
+        for engine in ("python", "compiled")
+    }
+    assert keys["python"] != keys["compiled"]
+    with pytest.raises(ValueError, match="unknown engine"):
+        SweepSpec(scenarios=("pair-stagger",), policies=("fifo",),
+                  engine="cuda")
+    with pytest.raises(ValueError, match="no engine axis"):
+        SweepSpec(scenarios=("pair-stagger",), policies=("fifo",),
+                  machine="executor", engine="compiled")
+
+
+# ------------------------------------------------- numba-absent contract
+def _subprocess_env(**extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.update(extra)
+    return env
+
+
+def test_import_never_hard_requires_numba():
+    """Package import succeeds even when importing numba raises — the
+    engine must degrade to the interpreted twin, not fail (ISSUE 7)."""
+    code = (
+        "import builtins\n"
+        "real = builtins.__import__\n"
+        "def deny(name, *a, **k):\n"
+        "    if name == 'numba' or name.startswith('numba.'):\n"
+        "        raise ImportError('numba blocked for the test')\n"
+        "    return real(name, *a, **k)\n"
+        "builtins.__import__ = deny\n"
+        "import repro.core.fastsim_twin as tw\n"
+        "import repro.core.fastsim  # noqa: F401\n"
+        "assert tw.NUMBA_AVAILABLE is False\n"
+        "print('fallback-ok')\n")
+    out = subprocess.run([sys.executable, "-c", code], cwd=REPO,
+                         env=_subprocess_env(), capture_output=True,
+                         text=True)
+    assert out.returncode == 0, out.stderr
+    assert "fallback-ok" in out.stdout
+
+
+def test_env_var_forces_numba_off():
+    code = (
+        "import repro.core.fastsim_twin as tw\n"
+        "assert tw.NUMBA_AVAILABLE is False\n"
+        "print('forced-off')\n")
+    out = subprocess.run([sys.executable, "-c", code], cwd=REPO,
+                         env=_subprocess_env(REPRO_NO_NUMBA="1"),
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "forced-off" in out.stdout
+
+
+def test_interp_backend_runs_without_native_or_numba():
+    """End-to-end engine run forced onto the pure-NumPy twin in a clean
+    process (both escape hatches set): byte-identical finishes against a
+    reference run in this process."""
+    ref = simulate(WORKLOADS["pair"], lambda: make_policy("srtf"),
+                   n_sm=N_SM, seed=SEED, oracle_runtimes=dict(ORACLE),
+                   engine="python")
+    code = (
+        "import json\n"
+        "from repro.core.fastsim import FastSimulator, backend_name\n"
+        "from repro.core.policies import make_policy\n"
+        "from test_fastpath import N_SM, ORACLE, SEED, WORKLOADS\n"
+        "assert backend_name() == 'interp'\n"
+        "sim = FastSimulator(WORKLOADS['pair'], make_policy('srtf'),\n"
+        "                    n_sm=N_SM, seed=SEED,\n"
+        "                    oracle_runtimes=dict(ORACLE))\n"
+        "print(json.dumps(sim.run().finish, sort_keys=True))\n")
+    env = _subprocess_env(REPRO_NO_NUMBA="1", REPRO_NO_NATIVE="1")
+    env["PYTHONPATH"] += os.pathsep + str(REPO / "tests")
+    out = subprocess.run([sys.executable, "-c", code], cwd=REPO, env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert json.loads(out.stdout) == ref.finish
