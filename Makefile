@@ -5,10 +5,12 @@ export PYTHONPATH := src
         smoke-sweep-closedloop smoke-sweep-executor golden \
         bench bench-smoke bench-compiled
 
-# Static determinism & cache-integrity analysis (DESIGN.md Section 9):
-# the three repro.analysis passes, then ruff (pyflakes/pycodestyle-errors/
-# isort per pyproject.toml).  Ruff is a dev extra — skipped with a notice
-# where it is not installed (CI installs it and enforces both).
+# Static determinism & cache-integrity analysis (DESIGN.md Sections
+# 9+11): the repro.analysis passes — fingerprint/determinism/protocol
+# plus the engine-verification trio (conformance/translate/layout) —
+# then ruff (pyflakes/pycodestyle-errors/isort per pyproject.toml).
+# Ruff is a dev extra — skipped with a notice where it is not installed
+# (CI installs it and enforces both).
 analyze:
 	$(PY) -m repro.analysis
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \

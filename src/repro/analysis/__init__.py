@@ -14,6 +14,19 @@ Three AST passes guard the invariants every reported number rests on
   Policy hint flags, the fused/typed ``SchedulerCore`` dispatch pair, and
   full Machine-protocol signatures.
 
+Three more passes verify the compiled DES engine trio (DESIGN.md
+Section 11):
+
+* :mod:`repro.analysis.conformance` — ``fastsim_twin`` stays inside the
+  nopython subset all three backends execute identically;
+* :mod:`repro.analysis.translate` — twin and generated-C functions lower
+  to the same normalized IR (control-flow skeleton + operation bags),
+  plus constant-drift / FMA-contraction / int-division / narrowed-dtype
+  lints on the C side;
+* :mod:`repro.analysis.layout` — field tables, allocation widths, C
+  accessor strides, the 29-array state order, and the buffer-growth
+  exit wiring all agree.
+
 Run it as ``python -m repro.analysis`` (CI does, via ``make analyze``).
 The package never imports ``repro.core`` — everything is file-level AST,
 so it can analyze mutated copies of the tree (and the heavy simulator
@@ -23,11 +36,13 @@ stack never loads just to lint).
 from __future__ import annotations
 
 from .cli import PASSES, main, run_passes
+from .conformance import scan_conformance
 from .determinism import (
     default_scan_modules,
     scan_determinism,
     scan_source,
 )
+from .layout import scan_layout
 from .importgraph import (
     ENTRY_POINTS,
     NON_RESULT_MODULES,
@@ -50,11 +65,13 @@ from .report import (
     apply_baseline,
     format_report,
 )
+from .translate import FuncSummary, scan_translation
 
 __all__ = [
     "Baseline",
     "ENTRY_POINTS",
     "Finding",
+    "FuncSummary",
     "NON_RESULT_MODULES",
     "PASSES",
     "Report",
@@ -71,7 +88,10 @@ __all__ = [
     "load_fingerprint_table",
     "main",
     "run_passes",
+    "scan_conformance",
     "scan_determinism",
+    "scan_layout",
     "scan_source",
+    "scan_translation",
     "transitive_closure",
 ]

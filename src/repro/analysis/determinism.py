@@ -268,21 +268,50 @@ def default_scan_modules(core_dir: Optional[Path] = None) -> List[str]:
     return sorted(mods)
 
 
+#: Repo-level directories the pass also lints (benchmarks drive cached
+#: sweeps; tests pin golden bytes — nondeterminism there corrupts both).
+REPO_SCAN_DIRS = ("benchmarks", "tests")
+
+
+def repo_scan_files(core_dir: Path) -> List[tuple]:
+    """``(module-label, path)`` for repo-level scan targets.
+
+    Only resolves when ``core_dir`` sits at the canonical
+    ``<root>/src/repro/core`` location; ``--core-dir`` scratch trees have
+    no surrounding repo and are silently scanned core-only.
+    """
+    core_dir = Path(core_dir).resolve()
+    if core_dir.name != "core" or core_dir.parent.name != "repro" \
+            or core_dir.parent.parent.name != "src":
+        return []
+    root = core_dir.parent.parent.parent
+    out = []
+    for dirname in REPO_SCAN_DIRS:
+        d = root / dirname
+        if not d.is_dir():
+            continue
+        for path in sorted(d.glob("*.py")):
+            out.append((f"{dirname}/{path.stem}", path))
+    return out
+
+
 def scan_determinism(core_dir: Optional[Path] = None,
                      modules: Optional[Sequence[str]] = None
                      ) -> List[Finding]:
     """Run the determinism lints; returns raw (un-baselined) findings."""
     core_dir = Path(core_dir) if core_dir is not None else CORE_DIR
     available = list_modules(core_dir)
+    targets: List[tuple] = []
     if modules is None:
-        modules = [m for m in default_scan_modules(core_dir)
+        targets = [(m, available[m])
+                   for m in default_scan_modules(core_dir)
                    if m in available]
+        targets.extend(repo_scan_files(core_dir))
+    else:
+        targets = [(m, available[m]) for m in modules if m in available]
     findings: List[Finding] = []
-    for stem in modules:
-        path = available.get(stem)
-        if path is None:
-            continue
-        scanner = _Scanner(stem)
+    for label, path in targets:
+        scanner = _Scanner(label)
         scanner.visit(ast.parse(path.read_text(), filename=str(path)))
         findings.extend(scanner.findings)
     findings.sort(key=lambda f: (f.module, f.line, f.rule))

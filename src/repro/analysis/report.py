@@ -27,7 +27,7 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 #: Passes whose findings may be suppressed by the baseline.
-BASELINABLE_PASSES = ("determinism",)
+BASELINABLE_PASSES = ("determinism", "conformance")
 
 DEFAULT_BASELINE_PATH = Path(__file__).with_name("baseline.json")
 
@@ -116,12 +116,17 @@ class Report:
 
 
 def apply_baseline(findings: Sequence[Finding],
-                   baseline: Baseline) -> Report:
+                   baseline: Baseline,
+                   check_stale: bool = True) -> Report:
     """Split findings into blocking vs. baseline-suppressed.
 
     Per key the first ``count`` occurrences are suppressed and any excess
     blocks — so adding a *second* wall-clock read to an already-baselined
     function is a new finding, not a free ride.
+
+    ``check_stale=False`` skips the stale-entry warning: staleness is only
+    decidable when every baselinable pass actually ran (a ``--passes``
+    subset would otherwise flag entries of the skipped passes).
     """
     budget = {k: n for k, (n, _) in baseline.entries.items()}
     seen = set()
@@ -138,7 +143,7 @@ def apply_baseline(findings: Sequence[Finding],
         else:
             blocking.append(f)
     stale = [k for k, (n, _) in sorted(baseline.entries.items())
-             if k not in seen]
+             if k not in seen] if check_stale else []
     empty = [k for k, (n, r) in sorted(baseline.entries.items())
              if k in seen and not r.strip()]
     return Report(blocking=blocking, suppressed=suppressed,

@@ -1,0 +1,244 @@
+"""Mutation tests for the engine-verification passes.
+
+Each test copies ``repro/core`` into a scratch tree, applies one
+unmirrored edit of the kind the passes exist to catch, and asserts the
+CLI turns red (exit 1) with the expected rule — plus the clean-copy
+green case, the ``--json`` contract, and the crash exit code (2).
+DESIGN.md Section 11 documents the rule inventory.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    main,
+    scan_conformance,
+    scan_layout,
+    scan_translation,
+)
+from repro.analysis.importgraph import CORE_DIR
+
+BASELINE = Path(__file__).resolve().parent.parent / "src" / "repro" / \
+    "analysis" / "baseline.json"
+
+ENGINE_PASSES = "conformance,translate,layout"
+
+
+@pytest.fixture()
+def scratch_core(tmp_path):
+    dst = tmp_path / "core"
+    dst.mkdir()
+    for path in sorted(CORE_DIR.glob("*.py")):
+        shutil.copy(path, dst / path.name)
+    return dst
+
+
+def _mutate(core: Path, filename: str, old: str, new: str) -> None:
+    path = core / filename
+    text = path.read_text()
+    assert old in text, f"mutation anchor not found in {filename}: {old!r}"
+    path.write_text(text.replace(old, new, 1))
+
+
+def _cli(core: Path, *extra: str) -> int:
+    return main(["--core-dir", str(core), "--baseline", str(BASELINE),
+                 "--passes", ENGINE_PASSES, *extra])
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------------ green path
+def test_clean_scratch_copy_is_green(scratch_core, capsys):
+    assert _cli(scratch_core) == 0
+    assert "0 blocking finding(s)" in capsys.readouterr().out
+
+
+def test_clean_tree_engine_passes_have_no_findings(scratch_core):
+    assert scan_conformance(scratch_core) == []
+    assert scan_translation(scratch_core) == []
+    assert scan_layout(scratch_core) == []
+
+
+# ------------------------------------------------- translate: pair diffs
+def test_unmirrored_twin_edit_turns_red(scratch_core):
+    # The required twin-side mutation: relax one comparison in
+    # _pred_remaining without touching the C mirror.
+    _mutate(scratch_core, "fastsim_twin.py",
+            "if rb < 0:", "if rb <= 0:")
+    findings = scan_translation(scratch_core)
+    assert "pair-mismatch" in _rules(findings)
+    assert any("_pred_remaining" in f.context for f in findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_swapped_comparison_in_c_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_c.py",
+            "if (ki != kj) return ki < kj;",
+            "if (ki != kj) return ki <= kj;")
+    findings = scan_translation(scratch_core)
+    assert "pair-mismatch" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_missing_c_function_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_c.py",
+            "static void broadcast_t(", "static void broadcast_t_x(")
+    rules = _rules(scan_translation(scratch_core))
+    assert "missing-function" in rules
+    assert "extra-function" in rules
+    assert _cli(scratch_core) == 1
+
+
+def test_dropped_twin_statement_turns_red(scratch_core):
+    # Deleting a mirrored write must show up as a bag mismatch even
+    # though control flow is unchanged.
+    _mutate(scratch_core, "fastsim_twin.py",
+            "    sd[SD_BUSY] = sd[SD_BUSY] + (now - start) * frac\n",
+            "    pass\n")
+    findings = scan_translation(scratch_core)
+    assert "pair-mismatch" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+# ------------------------------------------- translate: numeric C lints
+def test_c_constant_drift_turns_red(scratch_core):
+    # The required C-side constant drift: a hand-written #define
+    # shadowing the generated block with a different value.
+    _mutate(scratch_core, "fastsim_c.py",
+            "typedef struct {", "#define SMI_LEN 9\ntypedef struct {")
+    findings = scan_translation(scratch_core)
+    assert "constant-drift" in _rules(findings)
+    assert any("SMI_LEN" in f.message for f in findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_missing_fp_contract_flag_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_c.py", '"-ffp-contract=off",', "")
+    findings = scan_translation(scratch_core)
+    assert "fma-contract" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_narrowed_dtype_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_c.py",
+            "int64_t rb, res;", "int rb, res;")
+    findings = scan_translation(scratch_core)
+    assert "narrowed-dtype" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_int_division_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_c.py",
+            "return ((double)rb / (double)res) * t;",
+            "return ((double)(rb / res)) * t;")
+    findings = scan_translation(scratch_core)
+    assert "int-division" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+# ------------------------------------------------------- layout: shapes
+def test_stride_off_by_one_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_c.py",
+            "S->tri[(i) * 3 + (c)]", "S->tri[(i) * 4 + (c)]")
+    findings = scan_layout(scratch_core)
+    assert "stride-mismatch" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_dropped_buffer_growth_exit_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_twin.py",
+            "        if ci[CI_REC_PRED] != 0 and si[SI_PRED_N] + 4 "
+            "> ci[CI_PRED_CAP]:\n            return 6\n", "")
+    findings = scan_layout(scratch_core)
+    assert "missing-growth-exit" in _rules(findings)
+    assert any("CI_PRED_CAP" in f.message for f in findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_field_table_renumber_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_twin.py", "RF_EXCL = 11", "RF_EXCL = 13")
+    findings = scan_layout(scratch_core)
+    assert "family-gap" in _rules(findings)
+    assert "col-bounds" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_wrong_family_column_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_twin.py",
+            "ri[r, RI_DONE]", "ri[r, RF_MEANT]")
+    assert "wrong-family" in _rules(scan_layout(scratch_core))
+    assert _cli(scratch_core) == 1
+
+
+def test_unassigned_capacity_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim.py",
+            "ci[tw.CI_PRED_CAP] = pred_cap", "pass")
+    assert "cap-unassigned" in _rules(scan_layout(scratch_core))
+    assert _cli(scratch_core) == 1
+
+
+def test_state_tuple_swap_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim.py",
+            "act, queue, rwi, rwf, newc, cand, crem,",
+            "act, queue, rwf, rwi, newc, cand, crem,")
+    assert "alloc-width" in _rules(scan_layout(scratch_core))
+    assert _cli(scratch_core) == 1
+
+
+# -------------------------------------------------- conformance subset
+def test_subset_violation_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_twin.py",
+            "    if rb < 0:", "    order = sorted([rb])\n    if rb < 0:")
+    findings = scan_conformance(scratch_core)
+    assert "subset-call" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+def test_narrow_numpy_dtype_turns_red(scratch_core):
+    _mutate(scratch_core, "fastsim_twin.py",
+            "batch = np.empty((MAX_BLOCK_SLOTS, 4), np.int64)",
+            "batch = np.empty((MAX_BLOCK_SLOTS, 4), np.int32)")
+    findings = scan_conformance(scratch_core)
+    assert "subset-dtype" in _rules(findings)
+    assert _cli(scratch_core) == 1
+
+
+# --------------------------------------------------------- CLI contract
+def test_cli_exit_2_on_analyzer_crash(scratch_core, capsys):
+    (scratch_core / "fastsim_twin.py").write_text("def (broken\n")
+    assert _cli(scratch_core) == 2
+    assert "analyzer crashed" in capsys.readouterr().err
+
+
+def test_json_output_clean(scratch_core, capsys):
+    assert _cli(scratch_core, "--json") == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["ok"] is True
+    assert payload["findings"] == []
+
+
+def test_json_output_records_are_stable_sorted(scratch_core, capsys):
+    _mutate(scratch_core, "fastsim_twin.py",
+            "if rb < 0:", "if rb <= 0:")
+    _mutate(scratch_core, "fastsim_c.py",
+            "S->tri[(i) * 3 + (c)]", "S->tri[(i) * 4 + (c)]")
+    assert _cli(scratch_core, "--json") == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["ok"] is False
+    records = payload["findings"]
+    assert records, "expected findings in JSON output"
+    for record in records:
+        assert set(record) == {"pass", "rule", "file", "line", "location",
+                               "context", "message", "suppressed"}
+        assert record["location"] == f"{record['file']}:{record['line']}"
+    keys = [(r["file"], r["line"], r["pass"], r["rule"], r["context"],
+             r["message"]) for r in records]
+    assert keys == sorted(keys)
+    assert {r["pass"] for r in records} == {"translate", "layout"}
