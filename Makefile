@@ -2,8 +2,8 @@ PY := python
 export PYTHONPATH := src
 
 .PHONY: analyze check check-all test test-all smoke smoke-sweep \
-        smoke-sweep-closedloop smoke-sweep-executor golden \
-        bench bench-smoke bench-compiled
+        smoke-sweep-closedloop smoke-sweep-executor smoke-dispatch \
+        golden bench bench-smoke bench-compiled
 
 # Static determinism & cache-integrity analysis (DESIGN.md Sections
 # 9+11): the repro.analysis passes — fingerprint/determinism/protocol
@@ -54,6 +54,14 @@ smoke-sweep-executor:
 # runner — small spec, multiprocess fan-out.
 smoke-sweep-closedloop:
 	$(PY) -m benchmarks.run closedloop --jobs 2 --subset 1 --no-cache
+
+# Distributed-dispatch smoke: the same cheap subset served to a 2-worker
+# localhost queue farm (DESIGN.md Section 12) — exercises the wire
+# protocol, chunked in-worker runner, packfile ingest, and the
+# byte-identical record path end to end.
+smoke-dispatch:
+	$(PY) -m benchmarks.run table5 --jobs 2 --subset 2 --no-cache \
+	    --dispatch queue --workers 2
 
 # Persistent DES perf lane: blocks/sec + cold/warm sweep wall time on
 # standardized workloads, written to BENCH_des.json at the repo root

@@ -47,21 +47,29 @@ SUBSET: Optional[int] = None
 #: DES event-loop engine ("python"/"compiled"; None = compiled when a
 #: fast backend is available — see repro.core.fastsim.default_engine).
 ENGINE: Optional[str] = None
+#: Cell dispatch tier ("local" = per-cell process pool; "queue" = chunked
+#: pull-based workers — see repro.core.distrib) and the queue tier's
+#: worker count (None = follow JOBS).
+DISPATCHER = "local"
+WORKERS: Optional[int] = None
 
 _UNSET = object()
 
 
 def configure(jobs: Optional[int] = None, cache_dir=_UNSET,
-              subset=_UNSET, engine=_UNSET) -> None:
-    """Set sweep parallelism / cache / workload-subset / DES engine for
-    this process.
+              subset=_UNSET, engine=_UNSET, dispatcher=_UNSET,
+              workers=_UNSET) -> None:
+    """Set sweep parallelism / cache / workload-subset / DES engine /
+    dispatcher for this process.
 
     ``cache_dir=None`` disables the on-disk cache; ``subset=N`` truncates
     every scenario's workload list to its first N entries (the CI smoke
     uses this to keep sweep-runner coverage cheap); ``engine`` pins the
-    DES event loop (``None`` = compiled-when-available).
+    DES event loop (``None`` = compiled-when-available); ``dispatcher``
+    selects the cell dispatch tier ("local"/"queue") and ``workers`` the
+    queue tier's worker count (``None`` = follow ``jobs``).
     """
-    global JOBS, CACHE_DIR, SUBSET, ENGINE
+    global JOBS, CACHE_DIR, SUBSET, ENGINE, DISPATCHER, WORKERS
     if jobs is not None:
         JOBS = max(1, int(jobs))
     if cache_dir is not _UNSET:
@@ -70,6 +78,10 @@ def configure(jobs: Optional[int] = None, cache_dir=_UNSET,
         SUBSET = int(subset) if subset is not None else None
     if engine is not _UNSET:
         ENGINE = engine
+    if dispatcher is not _UNSET:
+        DISPATCHER = dispatcher
+    if workers is not _UNSET:
+        WORKERS = int(workers) if workers is not None else None
 
 
 class _SubsetScenario(Scenario):
@@ -156,7 +168,17 @@ def sweep(scenarios, policies, predictors=(None,), seeds=(SEED,),
     spec = _build_spec(scenarios, policies, predictors=predictors,
                        seeds=seeds, until=until, machine=machine,
                        n_sm=n_sm, time_scale=time_scale)
-    return run_sweep(spec, jobs=JOBS, cache_dir=CACHE_DIR)
+    return run_sweep(spec, jobs=JOBS, cache_dir=CACHE_DIR,
+                     dispatcher=_dispatcher_for(machine), workers=WORKERS)
+
+
+def _dispatcher_for(*machines: str) -> str:
+    """The configured dispatcher, downgraded to "local" for executor
+    cells (the queue tier is DES-only: executor cells are wall-clock
+    measurements calibrated against local pool contention)."""
+    if DISPATCHER == "queue" and "executor" in machines:
+        return "local"
+    return DISPATCHER
 
 
 def sweeps(grids) -> List[SweepResult]:
@@ -164,7 +186,9 @@ def sweeps(grids) -> List[SweepResult]:
     cross-grid dedup — see :func:`repro.core.sweep.run_sweeps`).  Each
     grid is a dict of :func:`sweep` keyword arguments."""
     specs = [_build_spec(**grid) for grid in grids]
-    return run_sweeps(specs, jobs=JOBS, cache_dir=CACHE_DIR)
+    return run_sweeps(specs, jobs=JOBS, cache_dir=CACHE_DIR,
+                      dispatcher=_dispatcher_for(*(s.machine for s in specs)),
+                      workers=WORKERS)
 
 
 @functools.lru_cache(maxsize=None)

@@ -196,6 +196,84 @@ def _throughput_rows(smoke: bool, repeat: int, engines) -> list:
     return rows
 
 
+#: Worker count of the dispatch lane — mirrors ``make smoke-dispatch``
+#: (a 2-worker localhost farm) and keeps the comparison meaningful on
+#: single-CPU CI runners, where extra pool workers only add contention.
+DISPATCH_LANE_WORKERS = 2
+
+
+def _dispatch_rows(smoke: bool, repeat: int) -> list:
+    """Cold-sweep cells/sec of the *dispatch tier* under local vs. queue
+    dispatch at equal worker count (the PR-9 lane: chunked compiled-engine
+    reuse vs. per-cell pool dispatch).
+
+    The workload is many *tiny* DES cells — a four-program mix truncated
+    to two blocks per kernel on four SMs — so per-cell dispatch overhead
+    (pool task + pickle + one JSON file per record) dominates simulation
+    time; that is exactly the regime large sweeps with a fast engine live
+    in (DESIGN.md Section 12).  The rate divides computed cells by the
+    sweep's ``dispatch_s`` stat — the bracket around the dispatch tier
+    alone (pending list -> committed records).  Grid keying and result
+    assembly run identical code under either dispatcher and would only
+    dilute the comparison; ``total_s`` still records the end-to-end wall
+    time of each best pass.  Every pass starts from a fresh cache
+    directory; the queue row carries ``speedup_vs_local``.
+    """
+    from repro.core.scenarios import NProgramMix
+    from repro.core.sweep import SweepSpec, clear_cache_memo, run_sweeps
+
+    workers = DISPATCH_LANE_WORKERS
+    tiny = {n: scaled_spec(s, num_blocks=2)
+            for n, s in ERCBENCH.items() if n != "SHA1"}
+    scn = NProgramMix(seed=0, names=sorted(tiny), specs=tiny,
+                      n_programs=2, n_workloads=(12 if smoke else 300))
+    spec = SweepSpec(
+        scenarios=(scn,),
+        policies=("fifo", "srtf", "srtf-adaptive", "mpmax"),
+        seeds=(0,), n_sm=4)
+
+    # Both rates ride the container's CPU-frequency drift, and the lane is
+    # cheap (~2 s/pass) next to the heavy sweep rows — so it takes more
+    # best-of passes for the least-contended observation to surface on
+    # each side of the ratio.
+    passes = repeat if smoke else max(repeat, 4)
+    rows = []
+    local_rate = None
+    for disp in ("local", "queue"):
+        best = best_total = None
+        cells = chunk = 0
+        for _ in range(passes):
+            cache_dir = Path(tempfile.mkdtemp(prefix="bench_dispatch_"))
+            try:
+                clear_cache_memo()
+                t0 = time.perf_counter()
+                (res,) = run_sweeps([spec], jobs=workers,
+                                    cache_dir=cache_dir, dispatcher=disp,
+                                    workers=workers)
+                dt = time.perf_counter() - t0
+            finally:
+                shutil.rmtree(cache_dir, ignore_errors=True)
+            cells = int(res.stats["computed"])
+            chunk = int(res.stats.get("queue_chunk", 0))
+            dispatch_s = float(res.stats["dispatch_s"])
+            rate = cells / dispatch_s if dispatch_s > 0 else float("inf")
+            if best is None or rate > best:
+                best, best_total = rate, dt
+        row = {"name": f"sweep_cells_per_sec.{disp}", "cells": cells,
+               "cells_per_sec": round(best, 1), "workers": workers,
+               "total_s": round(best_total, 3),
+               "engine": _engine_label(
+                   "python" if backend_name() == "interp" else "compiled")}
+        if disp == "local":
+            local_rate = best
+        else:
+            row["chunk"] = chunk
+            if local_rate:
+                row["speedup_vs_local"] = round(best / local_rate, 2)
+        rows.append(row)
+    return rows
+
+
 def _sweep_rows(smoke: bool, jobs: int, repeat: int,
                 engine: str = "auto") -> list:
     """Cold + warm wall time of the flagship table5 sweep, exactly as the
@@ -265,6 +343,7 @@ def run(smoke: bool = False, jobs: int = 4, repeat: int = 2,
     # lane is pinned to it.
     rows += _sweep_rows(smoke, jobs, repeat,
                         engine=("python" if engine == "python" else "auto"))
+    rows += _dispatch_rows(smoke, repeat)
     payload = {
         "commit": _git_commit(),
         "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),

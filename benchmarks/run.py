@@ -18,14 +18,21 @@ Sweep-shaped modules execute through :mod:`repro.core.sweep`:
   (``python`` = reference loop, ``compiled`` = flat-array engine,
   ``auto`` = compiled when a fast backend is available; default auto).
   The resolved engine is echoed in the run header so BENCH rows are
-  attributable.
+  attributable,
+* ``--dispatch D``  — cell dispatch tier: ``local`` (per-cell process
+  pool, default) or ``queue`` (chunked pull-based workers —
+  :mod:`repro.core.distrib`; DES modules only, executor modules fall
+  back to local),
+* ``--workers N``   — worker count for ``--dispatch queue`` (default:
+  follow ``--jobs``).
 
 Usage::
 
     PYTHONPATH=src python -m benchmarks.run [module-substring ...] \
         [--jobs 4] [--cache-dir artifacts/sweep_cache | --no-cache] \
         [--subset 4] [--machine des|executor] \
-        [--engine auto|python|compiled]
+        [--engine auto|python|compiled] \
+        [--dispatch local|queue] [--workers 4]
 """
 
 from __future__ import annotations
@@ -76,6 +83,13 @@ def main() -> None:
                     default="auto",
                     help="DES event-loop engine (auto = compiled when a "
                          "fast backend is available)")
+    ap.add_argument("--dispatch", choices=("local", "queue"),
+                    default="local",
+                    help="cell dispatch tier (queue = chunked pull-based "
+                         "workers; DES modules only)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker count for --dispatch queue "
+                         "(default: follow --jobs)")
     args = ap.parse_args()
 
     from repro.core.fastsim import default_engine, engine_token
@@ -83,18 +97,23 @@ def main() -> None:
     from benchmarks import common
 
     engine = None if args.engine == "auto" else args.engine
+    extra = {"dispatcher": args.dispatch, "workers": args.workers}
     if args.no_cache:
         common.configure(jobs=args.jobs, cache_dir=None, subset=args.subset,
-                         engine=engine)
+                         engine=engine, **extra)
     elif args.cache_dir is not None:
         common.configure(jobs=args.jobs, cache_dir=args.cache_dir,
-                         subset=args.subset, engine=engine)
+                         subset=args.subset, engine=engine, **extra)
     else:
-        common.configure(jobs=args.jobs, subset=args.subset, engine=engine)
+        common.configure(jobs=args.jobs, subset=args.subset, engine=engine,
+                         **extra)
 
     # Attributability header: which event loop produced the rows below
     # (the token also names the active compiled backend).
     print(f"# engine={args.engine} -> {engine_token(engine or default_engine())}")
+    if args.dispatch != "local":
+        print(f"# dispatch={args.dispatch} workers="
+              f"{args.workers if args.workers is not None else args.jobs}")
     print("name,us_per_call,derived")
     failures = 0
     for modname, machine in MODULES:

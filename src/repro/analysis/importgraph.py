@@ -47,13 +47,17 @@ CORE_PACKAGE = "repro.core"
 #: machine's own driver module plus everything a sweep cell's *record*
 #: content is computed from: the policy and predictor implementations the
 #: cell names, the metrics evaluated into the record, and — for scenario
-#: cells — the arrival-process code.
+#: cells — the arrival-process code.  Since PR 9, distrib.py — the cell
+#: runners + record store every dispatcher executes through — is an entry
+#: point of every machine: a record's bytes are shaped there (window
+#: evaluation, NaN encoding, serialization), whichever dispatcher and
+#: whichever host produced it.
 ENTRY_POINTS: Dict[str, Tuple[str, ...]] = {
-    "des": ("simulator", "policies", "predictor", "metrics"),
+    "des": ("simulator", "policies", "predictor", "metrics", "distrib"),
     "des-closed": ("simulator", "policies", "predictor", "metrics",
-                   "scenarios"),
+                   "scenarios", "distrib"),
     "executor": ("executor", "policies", "predictor", "metrics",
-                 "scenarios"),
+                 "scenarios", "distrib"),
 }
 
 #: Modules that are deliberately *not* result-determining, with the reason

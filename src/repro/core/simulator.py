@@ -62,6 +62,12 @@ from .workload import (
 
 _EPS = 1e-9
 
+#: Memoized per-kernel (noise, stagger) draws keyed by every input of the
+#: draws — see Simulator._init_kernel_rng.  Entries never change once
+#: stored (the draws are a pure function of the key), so a hit cannot
+#: depend on history.
+_NOISE_MEMO: Dict[tuple, Tuple[List[float], List[bool]]] = {}
+
 
 @dataclass
 class BlockRecord:
@@ -229,18 +235,38 @@ class Simulator(MachineBase):
         # solo and multiprogrammed runs with the same seed, and across
         # processes (zlib.crc32 is stable; Python's hash() is salted).
         name_hash = zlib.crc32(run.spec.name.encode()) % (2 ** 31)
-        rng = np.random.default_rng(
-            np.random.SeedSequence(entropy=(self.seed, name_hash, run.order)))
         spec = run.spec
-        if spec.rsd > 0.0:
-            sigma = math.sqrt(math.log(1.0 + spec.rsd * spec.rsd))
-            # Stored as a plain list: the issue loop indexes one factor per
-            # block, and float64 -> float via tolist() is exact.
-            run.noise = rng.lognormal(
-                mean=-0.5 * sigma * sigma, sigma=sigma,
-                size=spec.num_blocks).tolist()
-        else:
-            run.noise = [1.0] * spec.num_blocks
+        # SeedSequence expansion + generator construction is ~40us per
+        # kernel per cell — dominant in tiny-cell sweeps.  Every draw below
+        # (lognormal noise, then the stagger booleans off the SAME stream)
+        # is a pure function of this key, so the drawn outputs themselves
+        # are memoized; a hit hands back copies of exactly what a fresh
+        # generator would produce, draw-for-draw, including the stream
+        # position the stagger draw starts from.
+        memo_key = (self.seed, name_hash, run.order, spec.rsd,
+                    spec.num_blocks, self.n_sm, spec.stagger_frac,
+                    spec.stagger_sm_prob)
+        drawn = _NOISE_MEMO.get(memo_key)
+        if drawn is None:
+            rng = np.random.default_rng(np.random.SeedSequence(
+                entropy=(self.seed, name_hash, run.order)))
+            if spec.rsd > 0.0:
+                sigma = math.sqrt(math.log(1.0 + spec.rsd * spec.rsd))
+                # Stored as a plain list: the issue loop indexes one factor
+                # per block, and float64 -> float via tolist() is exact.
+                noise = rng.lognormal(
+                    mean=-0.5 * sigma * sigma, sigma=sigma,
+                    size=spec.num_blocks).tolist()
+            else:
+                noise = [1.0] * spec.num_blocks
+            stagger = [
+                spec.stagger_frac > 0.0 and rng.random() < spec.stagger_sm_prob
+                for _ in range(self.n_sm)]
+            drawn = (noise, stagger)
+            if len(_NOISE_MEMO) >= 4096:
+                _NOISE_MEMO.clear()
+            _NOISE_MEMO[memo_key] = drawn
+        run.noise = list(drawn[0])
         # The per-SM maps are dense on the DES (every SM is a candidate), so
         # they are normalized to flat index-addressed lists here; the
         # KernelRun fields default to dicts for machines with sparse
@@ -248,9 +274,7 @@ class Simulator(MachineBase):
         run.resident_per_sm = [0] * self.n_sm
         run.issued_per_sm = [0] * self.n_sm
         run.issue_gate = [0.0] * self.n_sm
-        run.stagger_sm = [
-            spec.stagger_frac > 0.0 and rng.random() < spec.stagger_sm_prob
-            for _ in range(self.n_sm)]
+        run.stagger_sm = list(drawn[1])
 
     # --------------------------------------------------------------- events
     def _push(self, time: float, kind: int, payload) -> None:

@@ -33,7 +33,18 @@ executes it:
   with ``jobs > 1`` they go through an identical spawn pool of the same
   width (serial parent-process baselines would be systematically faster
   than co-run cells on a small container, inflating every slowdown), and
-  the pool width is part of the solo cache key;
+  the pool width is part of the solo cache key.  DES solo baselines are
+  deterministic simulations and fan out through a fork pool of the same
+  width when there is more than one to measure;
+* **dispatchers**: ``dispatcher="local"`` (default) is the per-cell
+  process-pool path above.  ``dispatcher="queue"`` serves DES cells in
+  LPT-ordered *chunks* to long-lived pull-based workers — local spawned
+  processes and/or remote ``python -m repro.launch.worker`` nodes — with
+  heartbeat/death detection, bounded re-dispatch, and two-way cache sync
+  (:class:`repro.core.distrib.QueueDispatcher`, DESIGN.md Section 12).
+  Records are byte-identical across dispatchers (the PR-5/7 gate);
+  executor sweeps reject the queue tier because their cells are
+  wall-clock measurements calibrated against local pool contention;
 * **cache**: with ``cache_dir`` every cell and solo-runtime measurement is
   stored content-addressed, keyed by a SHA-256 over the *workload content*
   (every :class:`~repro.core.workload.KernelSpec` field, arrival times,
@@ -68,10 +79,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import json
 import math
 import multiprocessing
-import os
 import time
 import uuid
 from concurrent.futures import ProcessPoolExecutor
@@ -79,6 +88,17 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from .distrib import (
+    DispatchError,
+    QueueDispatcher,
+    cache_memo_stats,
+    cache_read as _cache_read,
+    cache_write as _cache_write,
+    canonical_digest as _canonical_digest,
+    clear_cache_memo,
+    run_cell as _run_cell,
+    scavenge_cache_dir,
+)
 from .executor import solo_runtime_executor
 from .fastsim import default_engine, engine_token
 from .metrics import (
@@ -87,7 +107,6 @@ from .metrics import (
     WindowMetrics,
     WorkloadMetrics,
     evaluate_queueing,
-    evaluate_window,
     geomean,
 )
 from .policies import make_policy
@@ -97,11 +116,10 @@ from .scenarios import (
     DEFAULT_EXECUTOR_TIME_SCALE,
     Scenario,
     executor_job,
-    executor_workload,
     make_scenario,
     workload_digest,
 )
-from .simulator import simulate, solo_runtime
+from .simulator import solo_runtime
 from .workload import Arrival, KernelSpec, N_SM, reorder_for_oracle
 
 #: Bump when simulator/policy/predictor changes intentionally alter
@@ -112,7 +130,11 @@ from .workload import Arrival, KernelSpec, N_SM, reorder_for_oracle
 #: 2: DES cell keys fold in the engine token (compiled flat-array engine,
 #:    DESIGN.md Section 10) and the "des"/"des-closed" fingerprints widen
 #:    to the engine sources.
-CACHE_VERSION = 2
+#: 3: the cell runners and record store move to distrib.py (the
+#:    distributed sweep tier, DESIGN.md Section 12) and every machine's
+#:    fingerprint widens to the same 13-module closure — records produced
+#:    by any dispatcher share one provenance domain.
+CACHE_VERSION = 3
 
 #: The two concrete machines a sweep can target.
 MACHINES = ("des", "executor")
@@ -324,27 +346,10 @@ class SweepResult:
 
 
 # ----------------------------------------------------------------- cache
-def _nan_to_null(obj):
-    """Replace float NaN with ``None``, recursively.
-
-    ``json.dumps`` would otherwise emit the non-standard ``NaN`` token
-    (rejected by strict parsers) into cache records and digest payloads;
-    nothing-finished cells carry NaN STP/ANTT/fairness by design.
-    """
-    if isinstance(obj, float):
-        return None if math.isnan(obj) else obj
-    if isinstance(obj, dict):
-        return {k: _nan_to_null(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [_nan_to_null(v) for v in obj]
-    return obj
-
-
-def _canonical_digest(payload: dict) -> str:
-    blob = json.dumps(_nan_to_null(payload), sort_keys=True,
-                      separators=(",", ":"), allow_nan=False)
-    return hashlib.sha256(blob.encode()).hexdigest()
-
+# The record store itself (NaN-safe JSON, the bounded LRU mirror,
+# packfiles, atomic writes, tmp scavenging) and the cell runners live in
+# :mod:`repro.core.distrib` — the execution tier shared by every
+# dispatcher.  This module owns the *keys*: what identifies a cell.
 
 #: Result-determining source files per machine: any edit to these changes
 #: every cache key, so result-changing commits auto-invalidate without a
@@ -364,22 +369,33 @@ def _canonical_digest(payload: dict) -> str:
 #: scenarios.py pulls executor.py into the closed-loop DES fingerprint via
 #: the ExecutorJob bridge import), which is the safe direction for a
 #: cache key.
+#: Since PR 9 the three tables are identical: distrib.py — the cell
+#: runners + record store every dispatcher executes through — joins every
+#: machine's entry points, and its own closure (simulator + engines for
+#: the DES runner, scenarios + executor for the bridge) pulls each
+#: machine's remaining sources in.  The unification over-invalidates
+#: (e.g. an engine edit now also invalidates executor records) but keeps
+#: one provenance domain across dispatchers: a record computed on a
+#: remote worker is keyed by exactly the code the local path would have
+#: run, and the worker handshake compares these same fingerprints.
 _FINGERPRINT_SOURCES: Dict[str, Tuple[str, ...]] = {
     # fastsim/fastsim_c/fastsim_twin: the compiled event-loop engine
     # (DESIGN.md Section 10) is reachable from simulate()'s lazy engine
     # selection, and although it is gated bit-identical to the reference
     # loop, an edit to it must invalidate DES cells — under-invalidation
     # would silently serve records produced by unvetted engine code.
-    "des": ("simulator", "machine", "events", "policies", "predictor",
-            "workload", "metrics", "fastsim", "fastsim_c", "fastsim_twin"),
-    # Closed-loop DES cells additionally depend on scenarios.py: the
+    "des": ("distrib", "simulator", "machine", "events", "policies",
+            "predictor", "workload", "metrics", "scenarios", "executor",
+            "fastsim", "fastsim_c", "fastsim_twin"),
+    # Closed-loop DES cells also depend on scenarios.py directly: the
     # arrival *process* code (not a materialized list) determines what the
     # cell simulates, so an edit to it must invalidate those cells.
-    "des-closed": ("simulator", "machine", "events", "policies",
+    "des-closed": ("distrib", "simulator", "machine", "events", "policies",
                    "predictor", "workload", "metrics", "scenarios",
                    "executor", "fastsim", "fastsim_c", "fastsim_twin"),
-    "executor": ("executor", "machine", "events", "policies", "predictor",
-                 "workload", "metrics", "scenarios"),
+    "executor": ("distrib", "simulator", "machine", "events", "policies",
+                 "predictor", "workload", "metrics", "scenarios",
+                 "executor", "fastsim", "fastsim_c", "fastsim_twin"),
 }
 
 
@@ -406,51 +422,13 @@ def _code_fingerprint(machine: str = "des") -> str:
     return fp
 
 
-#: Per-process in-memory mirror of the on-disk cache, keyed by
-#: (cache_dir, content key).  Cache keys are content-addressed — a record
-#: for a key never legitimately changes — so warm reruns inside one
-#: process (the benchmark driver runs several modules over one shared
-#: sweep; tests re-run specs back to back) skip the disk read *and* the
-#: JSON parse entirely.  Keying by cache_dir keeps distinct directories
-#: (e.g. per-test tmp dirs) fully independent.
-_read_memo: Dict[Tuple[str, str], dict] = {}
+def code_fingerprints() -> Dict[str, str]:
+    """Every fingerprint this code tree produces, by machine key.
 
-
-def clear_cache_memo() -> None:
-    """Drop the in-memory cache mirror (tests that mutate cache files on
-    disk out-of-band call this to force re-reads)."""
-    _read_memo.clear()
-
-
-def _cache_read(cache_dir: Optional[Path], key: str) -> Optional[dict]:
-    if cache_dir is None:
-        return None
-    memo_key = (str(cache_dir), key)
-    hit = _read_memo.get(memo_key)
-    if hit is not None:
-        return hit
-    path = cache_dir / f"{key}.json"
-    try:
-        record = json.loads(path.read_text())
-    except (FileNotFoundError, json.JSONDecodeError):
-        return None
-    _read_memo[memo_key] = record
-    return record
-
-
-def _cache_write(cache_dir: Optional[Path], key: str, record: dict) -> None:
-    if cache_dir is None:
-        return
-    cache_dir.mkdir(parents=True, exist_ok=True)
-    path = cache_dir / f"{key}.json"
-    tmp = cache_dir / f".{key}.{os.getpid()}.tmp"
-    tmp.write_text(json.dumps(_nan_to_null(record), sort_keys=True,
-                              allow_nan=False))
-    os.replace(tmp, path)  # atomic under concurrent writers
-    # Mirror what a reader would decode (NaN -> null -> NaN round-trips in
-    # the consumers), so a same-process warm hit is indistinguishable from
-    # a disk hit.
-    _read_memo[(str(cache_dir), key)] = record
+    The dispatcher/worker handshake payload: a worker whose fingerprints
+    disagree with the dispatcher's refuses the run, because records it
+    computed would be keyed by code the parent is not running."""
+    return {m: _code_fingerprint(m) for m in _FINGERPRINT_SOURCES}
 
 
 def _des_solo_key(spec: KernelSpec, seed: int, n_sm: int) -> str:
@@ -488,6 +466,13 @@ def solo_runtime_cached(spec: KernelSpec, seed: int = 0, n_sm: int = N_SM,
                       seed=seed)
     _cache_write(cache_dir, key, {"runtime": rt})
     return rt
+
+
+def _measure_des_solo(payload: dict) -> float:
+    """Measure one DES solo baseline (module-level: pickles into the fork
+    pool when a cold sweep has several baselines to simulate)."""
+    return solo_runtime(payload["spec"], lambda: make_policy("fifo"),
+                        n_sm=payload["n_sm"], seed=payload["seed"])
 
 
 def _measure_executor_solo(payload: dict) -> float:
@@ -536,14 +521,19 @@ def _cell_key(arrivals: Sequence[Arrival], policy: str, predictor: str,
               solo: Dict[str, float], machine: str = "des",
               nonce: Optional[str] = None,
               time_scale: Optional[float] = None,
-              engine: Optional[str] = None) -> str:
+              engine: Optional[str] = None,
+              wl_digest: Optional[str] = None) -> str:
     # The workload content enters through scenarios.workload_digest — the
     # one canonical payload (spec fields + times + uids) shared with tests
-    # and documentation.
+    # and documentation.  ``wl_digest`` lets _queue_spec pass the digest it
+    # already computed for this arrival list (non-reordering policies of
+    # one workload all share it); the value is workload_digest(arrivals)
+    # either way, so keys cannot depend on who computed it.
     payload = {
         "version": CACHE_VERSION, "kind": "cell", "machine": machine,
         "code": _code_fingerprint(machine),
-        "workload": workload_digest(arrivals),
+        "workload": (workload_digest(arrivals)
+                     if wl_digest is None else wl_digest),
         "policy": policy, "predictor": predictor, "seed": seed,
         "n_sm": n_sm, "until": until, "solo": solo,
     }
@@ -606,110 +596,6 @@ def _effective(arrivals: Sequence[Arrival], policy: str,
         return (reorder_for_oracle(arrivals, solo,
                                    longest_first=(policy == "ljf")), "fifo")
     return list(arrivals), policy
-
-
-def _run_des_cell(payload: dict) -> dict:
-    """One DES simulation, evaluated over its observation window.
-
-    Open-loop payloads carry materialized ``arrivals``; closed-loop
-    payloads carry the scenario + workload name, and the worker builds a
-    fresh single-use arrival process (the completions of *this* cell's
-    policy drive it — that coupling is the experiment).
-    """
-    solo: Dict[str, float] = payload["solo"]
-    if payload.get("closed_loop"):
-        scn: ClosedLoopScenario = payload["scenario_obj"]
-        arrivals, source = [], scn.make_process(payload["workload_name"])
-    else:
-        arrivals, source = payload["arrivals"], None
-    res = simulate(
-        arrivals,
-        lambda: make_policy(payload["policy"]),
-        n_sm=payload["n_sm"],
-        seed=payload["seed"],
-        oracle_runtimes=solo,
-        predictor=payload["predictor"],
-        until=payload["until"],
-        arrival_source=source,
-        engine=payload.get("engine"),
-    )
-    solo_by_key = {k: solo[res.name[k]] for k in res.turnaround}
-    window = evaluate_window(
-        res.turnaround, solo_by_key, unfinished=res.unfinished,
-        end_time=res.end_time, makespan=res.makespan,
-        utilization=res.utilization)
-    return {
-        "window": dataclasses.asdict(window),
-        "turnaround": dict(res.turnaround),
-        "finish": dict(res.finish),
-        "unfinished": list(res.unfinished),
-        "names": dict(res.name),
-        "arrival": dict(res.arrival),
-    }
-
-
-def _run_executor_cell(payload: dict) -> dict:
-    """One real-JAX executor run over the bridged workload.
-
-    Same label-free record shape as the DES path (``window`` / ``turnaround``
-    / ``finish`` / ``unfinished`` / ``names`` / ``arrival``), plus
-    ``measured: true`` — every float here is a wall-clock measurement.
-    Closed-loop payloads attach the arrival process through the same
-    feedback edge as the DES, with the bridge scaling scenario cycles to
-    lane seconds in both directions.
-    """
-    from .executor import LaneExecutor
-
-    solo: Dict[str, float] = payload["solo"]
-    n_lanes = payload["n_sm"]
-    time_scale = payload["time_scale"]
-    ex = LaneExecutor([], make_policy(payload["policy"]),
-                      n_lanes=n_lanes,
-                      predictor=payload["predictor"],
-                      job_bridge=lambda a: executor_job(
-                          a, n_lanes=n_lanes, time_scale=time_scale))
-    ex.oracle_runtimes.update(solo)
-    if payload.get("closed_loop"):
-        scn: ClosedLoopScenario = payload["scenario_obj"]
-        ex.attach_arrival_source(scn.make_process(payload["workload_name"]),
-                                 time_scale=time_scale)
-    else:
-        for key, job in executor_workload(payload["arrivals"],
-                                          n_lanes=n_lanes,
-                                          time_scale=time_scale):
-            ex.add_job(job, key=key)
-    ex.run(until=payload["until"])
-    w = ex.window()
-    solo_by_key = {k: solo[w.names[k]] for k in w.turnaround}
-    window = evaluate_window(
-        w.turnaround, solo_by_key, unfinished=w.unfinished,
-        end_time=w.end_time, makespan=w.makespan,
-        utilization=w.utilization)
-    return {
-        "window": dataclasses.asdict(window),
-        "turnaround": dict(w.turnaround),
-        "finish": dict(w.finish),
-        "unfinished": list(w.unfinished),
-        "names": dict(w.names),
-        "arrival": dict(w.arrival),
-        "measured": True,
-    }
-
-
-def _run_cell(payload: dict) -> dict:
-    """Execute one cell (module-level: pickles into worker processes).
-
-    The payload carries *effective* arrivals/policy (see :func:`_effective`)
-    and the solo-runtime oracle; the returned record is label-free.
-    """
-    if payload["machine"] == "executor":
-        # Not written to disk: the key folds in a per-run nonce, so the
-        # record could never be read back — persisting it would only grow
-        # the cache directory without bound.
-        return _run_executor_cell(payload)
-    record = _run_des_cell(payload)
-    _cache_write(payload["cache_dir"], payload["key"], record)
-    return record
 
 
 # ---------------------------------------------------------------- runner
@@ -777,7 +663,11 @@ def _measure_solos(solo_specs: Dict[tuple, KernelSpec], spec: SweepSpec,
                    ) -> Tuple[Dict[tuple, float], Dict[str, int]]:
     """Measure (or load) every solo baseline the sweep needs.
 
-    DES solos are deterministic simulations — serial and cached as before.
+    DES solos are deterministic simulations: cache misses fan out through
+    a fork pool of the sweep's width (they were serial even under
+    ``jobs > 1`` before PR 9 — pure fixed cost at the head of every cold
+    sweep), and since each is a pure function of (spec, seed, n_sm), pool
+    order cannot affect the values.
     Executor solos are wall-clock measurements, and with ``jobs > 1`` the
     *cells* will run inside a worker pool contending for CPU; baselines
     measured serially in the quiet parent would then be systematically
@@ -791,19 +681,31 @@ def _measure_solos(solo_specs: Dict[tuple, KernelSpec], spec: SweepSpec,
     memo: Dict[tuple, float] = {}
     computed = 0
     if spec.machine != "executor":
-        for mk, kspec in solo_specs.items():
-            seed = mk[2]
-            key = _des_solo_key(kspec, seed, spec.n_sm)
+        keys = {mk: _des_solo_key(kspec, mk[2], spec.n_sm)
+                for mk, kspec in solo_specs.items()}
+        misses = []
+        for mk, key in keys.items():
             hit = _cache_read(cache_dir, key)
             if hit is not None:
                 memo[mk] = float(hit["runtime"])
-                continue
-            computed += 1
-            rt = solo_runtime(kspec, lambda: make_policy("fifo"),
-                              n_sm=spec.n_sm, seed=seed)
-            _cache_write(cache_dir, key, {"runtime": rt})
-            memo[mk] = rt
-        return memo, {"solo_computed": computed, "solo_pool_jobs": 1}
+            else:
+                misses.append(mk)
+        pool_jobs = min(max(1, jobs), max(1, len(misses)))
+        if misses:
+            payloads = [{"spec": solo_specs[mk], "n_sm": spec.n_sm,
+                         "seed": mk[2]} for mk in misses]
+            if pool_jobs > 1:
+                with ProcessPoolExecutor(max_workers=pool_jobs) as pool:
+                    runtimes = list(pool.map(_measure_des_solo, payloads,
+                                             chunksize=1))
+            else:
+                runtimes = [_measure_des_solo(p) for p in payloads]
+            for mk, rt in zip(misses, runtimes):
+                memo[mk] = float(rt)
+                _cache_write(cache_dir, keys[mk], {"runtime": rt})
+            computed = len(misses)
+        return memo, {"solo_computed": computed,
+                      "solo_pool_jobs": pool_jobs}
 
     pool_jobs = max(1, jobs)
     keys = {mk: _executor_solo_key(kspec, spec.n_sm, pool_jobs)
@@ -870,6 +772,10 @@ def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
                              None if on_executor else seed, spec.n_sm)]
             for name, kspec in wl_specs.items()
         }
+        # One digest per arrival list, not one per cell: every
+        # non-reordering policy of this workload keys the same content
+        # (oracle-reordered SJF/LJF lists digest separately below).
+        base_digest = None if closed else workload_digest(arrivals)
         for policy in spec.policies:
             if closed and policy in ORACLE_ORDER_POLICIES:
                 raise ValueError(
@@ -879,9 +785,13 @@ def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
                     "to reorder")
             if closed:
                 eff_arrivals, eff_policy = None, policy
+                eff_digest = None
             else:
                 eff_arrivals, eff_policy = _effective(
                     arrivals, policy, wl_solo)
+                eff_digest = (workload_digest(eff_arrivals)
+                              if policy in ORACLE_ORDER_POLICIES
+                              else base_digest)
             for pred in spec.predictors:
                 pred_name = DEFAULT_PREDICTOR if pred is None else pred
                 if closed:
@@ -895,7 +805,7 @@ def _queue_spec(spec: SweepSpec, jobs: int, cache_dir: Optional[Path],
                                     seed, spec.n_sm, spec.until, wl_solo,
                                     machine=spec.machine, nonce=nonce,
                                     time_scale=spec.time_scale,
-                                    engine=engine)
+                                    engine=engine, wl_digest=eff_digest)
                 ordered.append((key, {
                     "scenario": scn.name, "workload": wl_name,
                     "policy": policy, "predictor": pred_name,
@@ -975,51 +885,113 @@ def _execute_pending(pending: List[dict], jobs: int,
             records[payload["key"]] = record
 
 
+#: The two cell-dispatch tiers a sweep can run under.
+DISPATCHERS = ("local", "queue")
+
+
 def run_sweeps(specs: Sequence[SweepSpec], jobs: int = 1,
-               cache_dir: Optional[Union[str, Path]] = None
-               ) -> List[SweepResult]:
+               cache_dir: Optional[Union[str, Path]] = None,
+               dispatcher: str = "local",
+               workers: Optional[int] = None,
+               dispatch_opts: Optional[dict] = None) -> List[SweepResult]:
     """Execute several sweeps as ONE batch: all cache misses share one
     worker pool (one straggler tail instead of one per sweep) and cells
     shared between specs are computed once, in flight, instead of meeting
     through the on-disk cache.  Returns one :class:`SweepResult` per spec,
-    exactly as consecutive :func:`run_sweep` calls would."""
+    exactly as consecutive :func:`run_sweep` calls would.
+
+    ``dispatcher="local"`` (default) computes misses through the
+    process-pool path; ``dispatcher="queue"`` serves them in chunks to
+    ``workers`` (default ``jobs``) long-lived pull-based workers via
+    :class:`repro.core.distrib.QueueDispatcher` — byte-identical records,
+    DES specs only.  ``dispatch_opts`` passes through to the dispatcher
+    (e.g. ``{"spawn_workers": False, "port": 5055}`` to serve remote
+    workers, or ``{"chunk_cells": 16}`` to pin the chunking policy).
+    """
+    if dispatcher not in DISPATCHERS:
+        raise ValueError(f"unknown dispatcher {dispatcher!r}; choose from "
+                         f"{DISPATCHERS}")
+    if dispatcher == "queue":
+        for spec in specs:
+            if spec.machine == "executor":
+                raise ValueError(
+                    "the queue dispatcher is DES-only: executor cells are "
+                    "wall-clock measurements calibrated against local "
+                    "pool contention (DESIGN.md Section 6); run executor "
+                    "sweeps with dispatcher='local'")
     # Baselined determinism finding (wallclock): elapsed_s is driver-side
     # bookkeeping landing only in SweepResult.stats — never in a cell
     # record or a cache key.
     t0 = time.perf_counter()
     cache_dir = Path(cache_dir) if cache_dir is not None else None
+    # Scavenge crashed writers' tmp orphans once per batch, before any
+    # cell could race a fresh tmp file with the same name.
+    scavenged = scavenge_cache_dir(cache_dir)
     records: Dict[str, dict] = {}          # key -> raw record
     pending: List[dict] = []
     queued = [_queue_spec(spec, jobs, cache_dir, records, pending)
               for spec in specs]
-    _execute_pending(pending, jobs, records)
+    batch_stats: Dict[str, float] = {"dispatcher": dispatcher,
+                                     "tmp_scavenged": scavenged}
+    # Baselined determinism finding (wallclock): dispatch_s brackets the
+    # dispatch tier alone (pending list -> committed records) so the perf
+    # lane can compare dispatchers on exactly the code the tier swaps;
+    # stats-only, like elapsed_s.
+    t_dispatch = time.perf_counter()
+    if dispatcher == "queue" and pending:
+        qd = QueueDispatcher(pending, cache_dir=cache_dir,
+                             workers=workers if workers is not None else jobs,
+                             fingerprints=code_fingerprints(),
+                             **(dispatch_opts or {}))
+        qrecords, qstats = qd.run()
+        records.update(qrecords)
+        batch_stats.update(qstats)
+    else:
+        _execute_pending(pending, jobs, records)
+    batch_stats["dispatch_s"] = time.perf_counter() - t_dispatch
     elapsed = time.perf_counter() - t0
+    memo = cache_memo_stats()
+    batch_stats.update(elapsed_s=elapsed,
+                       memo_entries=memo["entries"],
+                       memo_hits=memo["hits"],
+                       memo_evictions=memo["evictions"])
     out = []
     for entry in queued:
         cells = [CellResult.from_record(records[key], **labels)
                  for key, labels in entry["ordered"]]
-        out.append(SweepResult(cells,
-                               {**entry["stats"], "elapsed_s": elapsed}))
+        out.append(SweepResult(cells, {**entry["stats"], **batch_stats}))
     return out
 
 
 def run_sweep(spec: SweepSpec, jobs: int = 1,
-              cache_dir: Optional[Union[str, Path]] = None) -> SweepResult:
+              cache_dir: Optional[Union[str, Path]] = None,
+              dispatcher: str = "local",
+              workers: Optional[int] = None,
+              dispatch_opts: Optional[dict] = None) -> SweepResult:
     """Execute every cell of ``spec``; see the module docstring."""
-    return run_sweeps([spec], jobs=jobs, cache_dir=cache_dir)[0]
+    return run_sweeps([spec], jobs=jobs, cache_dir=cache_dir,
+                      dispatcher=dispatcher, workers=workers,
+                      dispatch_opts=dispatch_opts)[0]
 
 
 __all__ = [
     "CACHE_VERSION",
     "CellResult",
+    "DISPATCHERS",
+    "DispatchError",
+    "QueueDispatcher",
+    "cache_memo_stats",
     "clear_cache_memo",
+    "code_fingerprints",
     "ENGINES",
     "fingerprint_sources",
     "MACHINES",
     "MetricsCI",
+    "scavenge_cache_dir",
     "SweepResult",
     "SweepSpec",
     "run_sweep",
+    "run_sweeps",
     "solo_runtime_cached",
     "solo_runtime_executor_cached",
 ]

@@ -174,6 +174,16 @@ def test_fingerprint_tuples_are_sorted_and_unique():
         assert sorted(set(mods)) == sorted(mods), machine
 
 
+def test_distrib_joins_every_fingerprint_closure():
+    """ISSUE 9 satellite: the distributed cell runner (distrib.py) holds
+    the record schema and the cell execution path — every machine's
+    fingerprint tuple must carry it, so an edit re-keys cached records on
+    dispatcher and workers alike (the handshake then refuses mixed farms).
+    """
+    for machine, mods in fingerprint_sources().items():
+        assert "distrib" in mods, machine
+
+
 # --------------------------------------------------------- mutation tests
 @pytest.fixture()
 def scratch_core(tmp_path):
@@ -205,6 +215,18 @@ def test_mutation_dropped_engine_module_fails(scratch_core):
     _mutate(scratch_core, "sweep.py", '"fastsim_c"', '"fastsim_c_gone"')
     findings = check_fingerprint_coverage(scratch_core)
     assert any(f.rule == "under-coverage" and f.module == "fastsim_c"
+               for f in findings)
+    assert main(["--core-dir", str(scratch_core)]) == 1
+
+
+def test_mutation_dropped_distrib_fails(scratch_core):
+    """ISSUE 9 satellite: dropping distrib.py from a machine's fingerprint
+    tuple must turn the CLI red — an under-covered cell runner would let
+    record-schema edits serve stale cached records across the farm."""
+    _mutate(scratch_core, "sweep.py",
+            '"des": ("distrib"', '"des": ("distrib_gone"')
+    findings = check_fingerprint_coverage(scratch_core)
+    assert any(f.rule == "under-coverage" and f.module == "distrib"
                for f in findings)
     assert main(["--core-dir", str(scratch_core)]) == 1
 

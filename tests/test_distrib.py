@@ -1,0 +1,396 @@
+"""Distributed sweep tier tests: queue-vs-local byte identity on a mixed
+open/closed-loop multi-spec batch, worker-death re-dispatch, duplicate and
+unqueued result rejection, worker-cache prefill (manifest sync),
+crashed-writer scavenging, the bounded record memo, the chunking policy,
+and the dispatcher's validation surface.
+
+Workers here are real ``worker_serve`` processes forked from the test (the
+dispatcher's own spawn path is exercised end-to-end by the sweep-level
+byte-identity test); forking keeps the fast tier fast — no interpreter
+restart per worker.
+"""
+
+import os
+import socket
+import threading
+
+import pytest
+
+from repro.core.distrib import (
+    DispatchError,
+    PACK_SUFFIX,
+    QueueDispatcher,
+    RecordMemo,
+    cache_read,
+    cache_write,
+    chunk_size_for,
+    record_text,
+    recv_frame,
+    run_des_cell,
+    scavenge_cache_dir,
+    send_frame,
+    worker_serve,
+)
+from repro.core.scenarios import MGkClosed, TraceReplay
+from repro.core.sweep import (
+    SweepSpec,
+    _queue_spec,
+    clear_cache_memo,
+    code_fingerprints,
+    run_sweep,
+    run_sweeps,
+)
+from repro.core.workload import ERCBENCH, scaled_spec
+
+#: Tiny kernels: real ERCBench structure, two orders of magnitude cheaper.
+TINY = {
+    "JPEG-d": scaled_spec(ERCBENCH["JPEG-d"], num_blocks=48, mean_t=900.0),
+    "SAD": scaled_spec(ERCBENCH["SAD"], num_blocks=64, mean_t=1500.0),
+    "AES-e": scaled_spec(ERCBENCH["AES-e"], num_blocks=30, mean_t=700.0),
+}
+
+TRACE = [
+    {"kernel": "SAD", "time": 0.0},
+    {"kernel": "JPEG-d", "time": 100.0},
+    {"kernel": "AES-e", "time": 2_000.0},
+]
+
+
+def open_spec(policies=("fifo", "sjf"), seeds=(0, 1)):
+    scn = TraceReplay(trace=TRACE, specs=TINY, name="tiny")
+    return SweepSpec(scenarios=(scn,), policies=tuple(policies),
+                     seeds=tuple(seeds))
+
+
+def closed_spec():
+    scn = MGkClosed(seed=0, names=sorted(TINY), specs=TINY, n_total=6,
+                    mean_interarrival=1_200.0, population=2)
+    return SweepSpec(scenarios=(scn,), policies=("fifo", "srtf"))
+
+
+def pending_for(specs, cache_dir=None):
+    """The sweep runner's (records, pending) state for ``specs`` — the
+    exact payload list ``run_sweeps`` would hand the dispatcher."""
+    records, pending = {}, []
+    for spec in specs:
+        _queue_spec(spec, 1, cache_dir, records, pending)
+    return records, pending
+
+
+def fork_worker(port, **kw):
+    """Fork a real worker process against a listening dispatcher."""
+    pid = os.fork()
+    if pid:
+        return pid
+    code = 1
+    try:
+        code = worker_serve("127.0.0.1", port,
+                            fingerprints=kw.pop("fingerprints",
+                                                code_fingerprints()),
+                            **kw)
+    except BaseException:
+        code = 1
+    finally:
+        os._exit(code)
+
+
+def exit_code(pid):
+    _, status = os.waitpid(pid, 0)
+    return os.WEXITSTATUS(status)
+
+
+def disk_texts(cache_dir):
+    """key -> serialized record text, across per-key files and packfiles
+    (the two on-disk forms must carry identical bytes per key)."""
+    out = {}
+    for f in cache_dir.glob("*.json"):
+        out[f.stem] = f.read_text()
+    for pack in cache_dir.glob(f"*{PACK_SUFFIX}"):
+        for line in pack.read_text().splitlines():
+            key, _, text = line.partition("\t")
+            assert out.get(key, text) == text  # file/pack never disagree
+            out[key] = text
+    return out
+
+
+# ------------------------------------------------- queue == local, bytes
+def test_queue_matches_local_bytes_mixed_batch(tmp_path):
+    """The PR gate: one batch mixing open-loop (with oracle-reorder dedup)
+    and closed-loop specs produces byte-identical records and equal cells
+    under both dispatchers."""
+    local_dir, queue_dir = tmp_path / "local", tmp_path / "queue"
+    queue_dir.mkdir()
+    # A crashed writer's orphan from a "previous run": the batch driver
+    # scavenges it before dispatch.
+    orphan = queue_dir / f".{'b' * 64}.json.{_dead_pid()}.tmp"
+    orphan.write_text("{ truncated")
+
+    clear_cache_memo()
+    local = run_sweeps([open_spec(), closed_spec()], cache_dir=local_dir)
+    clear_cache_memo()
+    queue = run_sweeps([open_spec(), closed_spec()], cache_dir=queue_dir,
+                       dispatcher="queue", workers=2)
+
+    for a, b in zip(local, queue):
+        assert a.cells == b.cells
+    assert queue[0].stats["dispatcher"] == "queue"
+    assert queue[0].stats["tmp_scavenged"] == 1 and not orphan.exists()
+    assert queue[0].stats["queue_workers"] >= 1
+    assert queue[0].stats["queue_packs_written"] >= 1
+    assert queue[0].stats["queue_dead_workers"] == 0
+
+    a_texts, b_texts = disk_texts(local_dir), disk_texts(queue_dir)
+    assert set(a_texts) == set(b_texts)
+    assert a_texts == b_texts
+
+
+def test_warm_queue_run_hits_packfiles(tmp_path):
+    """Records the dispatcher packed are cache hits for the next run —
+    under either dispatcher."""
+    spec = open_spec(policies=("fifo",))
+    cold = run_sweep(spec, cache_dir=tmp_path, dispatcher="queue",
+                     workers=1)
+    assert cold.stats["computed"] == 2
+    clear_cache_memo()  # force the packfile read path, not the memo
+    warm = run_sweep(spec, cache_dir=tmp_path)
+    assert warm.stats["computed"] == 0
+    assert warm.stats["cache_hits"] == 2
+    assert cold.cells == warm.cells
+
+
+# ------------------------------------------------------- failure handling
+def test_worker_killed_mid_chunk_redispatched_once(tmp_path):
+    """A worker hard-exiting mid-chunk gets its un-committed cells
+    re-queued exactly once; a healthy worker finishes them and the records
+    still match the local path byte for byte."""
+    spec = open_spec(policies=("fifo", "srtf"), seeds=(0, 1, 2))
+    _, pending = pending_for([spec])
+    assert len(pending) == 6
+    qd = QueueDispatcher(pending, cache_dir=tmp_path / "queue", workers=2,
+                         spawn_workers=False, chunk_cells=2,
+                         stall_timeout_s=60.0,
+                         fingerprints=code_fingerprints())
+    port = qd.start()
+    # Sole worker: chunk 1 (2 cells) commits, then cell 3 trips die_after
+    # mid-chunk — chunk 2 never sends its result frame.
+    assert exit_code(fork_worker(port, die_after=3)) == 17
+    healthy = fork_worker(port)
+    records, stats = qd.serve()
+    assert exit_code(healthy) == 0
+
+    assert stats["queue_dead_workers"] == 1
+    assert stats["queue_requeued_cells"] == 2
+    assert set(qd._requeues.values()) == {1}  # each exactly once
+    assert len(records) == 6
+
+    clear_cache_memo()
+    run_sweeps([spec], cache_dir=tmp_path / "local")
+    local = disk_texts(tmp_path / "local")
+    for key, rec in records.items():
+        assert record_text(rec) == local[key]
+
+
+def test_fingerprint_drift_refuses_the_run(tmp_path):
+    """A worker whose result-determining code differs must not contribute
+    records: it rejects the run, the dispatcher aborts."""
+    _, pending = pending_for([open_spec(policies=("fifo",), seeds=(0,))])
+    qd = QueueDispatcher(pending, workers=1, spawn_workers=False,
+                         fingerprints={"des": "0" * 16})
+    port = qd.start()
+    pid = fork_worker(port)  # real fingerprints -> drift on "des"
+    with pytest.raises(DispatchError, match="rejected"):
+        qd.serve()
+    assert exit_code(pid) == 3
+
+
+# -------------------------------------------- protocol-level result rules
+def test_duplicate_and_unqueued_results_dropped(tmp_path):
+    """Only queued, not-yet-committed keys are ingested: a duplicate for a
+    committed key and a result for a never-queued key are counted and
+    dropped, never written."""
+    _, pending = pending_for([open_spec(policies=("fifo",), seeds=(0, 1))])
+    assert len(pending) == 2
+    qd = QueueDispatcher(pending, cache_dir=tmp_path, workers=1,
+                         spawn_workers=False, chunk_cells=1,
+                         stall_timeout_s=60.0,
+                         fingerprints=code_fingerprints())
+    port = qd.start()
+
+    with socket.create_connection(("127.0.0.1", port)) as sock:
+        send_frame(sock, {"t": "hello", "pid": os.getpid(), "host": "fake",
+                          "version": 1})
+        welcome = recv_frame(sock)
+        assert welcome["t"] == "welcome"
+        assert welcome["queued"] == sorted(p["key"] for p in pending)
+        send_frame(sock, {"t": "ready"})
+
+        task1 = recv_frame(sock)
+        assert task1["t"] == "task"
+        (c1,) = task1["cells"]
+        assert c1["cache_dir"] is None  # payloads are self-contained
+        r1 = run_des_cell(c1)
+        send_frame(sock, {"t": "result", "id": task1["id"],
+                          "records": {c1["key"]: r1}})
+
+        task2 = recv_frame(sock)
+        (c2,) = task2["cells"]
+        bogus = "f" * 64
+        send_frame(sock, {"t": "result", "id": task2["id"],
+                          "records": {c2["key"]: run_des_cell(c2),
+                                      c1["key"]: r1,       # duplicate
+                                      bogus: r1}})         # never queued
+        assert recv_frame(sock)["t"] == "shutdown"
+        send_frame(sock, {"t": "bye"})
+
+    records, stats = qd.serve()
+    assert stats["queue_duplicate_results"] == 1
+    assert stats["queue_unqueued_results"] == 1
+    assert set(records) == {c1["key"], c2["key"]}
+    assert bogus not in disk_texts(tmp_path)
+
+
+def test_prefill_serves_whole_run_from_worker_cache(tmp_path):
+    """Manifest sync: a worker whose local cache already holds every
+    queued key prefills them all — zero task frames, records identical to
+    the worker's local bytes, and the parent still gets its packfile."""
+    spec = open_spec()
+    warm = tmp_path / "warm"
+    clear_cache_memo()
+    run_sweep(spec, cache_dir=warm)
+    clear_cache_memo()
+    _, pending = pending_for([spec])
+    qd = QueueDispatcher(pending, cache_dir=tmp_path / "parent", workers=1,
+                         spawn_workers=False, stall_timeout_s=60.0,
+                         fingerprints=code_fingerprints())
+    port = qd.start()
+    pid = fork_worker(port, cache_dir=warm)
+    records, stats = qd.serve()
+    assert exit_code(pid) == 0
+    assert stats["queue_prefilled"] == len(pending) == len(records)
+    assert stats["queue_tasks"] == 0
+    warm_texts = disk_texts(warm)
+    for key, rec in records.items():
+        assert record_text(rec) == warm_texts[key]
+    assert disk_texts(tmp_path / "parent") == {
+        k: warm_texts[k] for k in records}
+
+
+# ------------------------------------------------------------- scavenging
+def _dead_pid():
+    """A pid guaranteed dead: a child that already exited and was reaped."""
+    pid = os.fork()
+    if pid == 0:
+        os._exit(0)
+    os.waitpid(pid, 0)
+    return pid
+
+
+def test_scavenge_removes_only_dead_writers(tmp_path):
+    key = "a" * 64
+    cache_write(tmp_path, key, {"x": 1.0})
+    committed = (tmp_path / f"{key}.json").read_text()
+
+    dead_tmp = tmp_path / f".{key}.json.{_dead_pid()}.tmp"
+    dead_tmp.write_text("{ truncated garbage")
+    live_tmp = tmp_path / f".{key}.json.{os.getpid()}.tmp"
+    live_tmp.write_text("in-flight")
+    unrelated = tmp_path / ".notes.tmp"  # no pid segment: never touched
+    unrelated.write_text("x")
+
+    assert scavenge_cache_dir(tmp_path) == 1
+    assert not dead_tmp.exists()
+    assert live_tmp.exists() and unrelated.exists()
+    # Repeat runs are idempotent while the live writer stays live.
+    assert scavenge_cache_dir(tmp_path) == 0
+
+    # A crashed writer can neither corrupt nor shadow the committed
+    # record: readers only ever open the final name.
+    clear_cache_memo()
+    assert cache_read(tmp_path, key) == {"x": 1.0}
+    assert (tmp_path / f"{key}.json").read_text() == committed
+
+
+def test_crashed_writer_tmp_never_shadows_commit(tmp_path):
+    """Even before scavenging, an orphan tmp for a key with no committed
+    record is invisible to readers — a half-written record can never be
+    mistaken for a cache hit."""
+    key = "c" * 64
+    (tmp_path / f".{key}.json.{_dead_pid()}.tmp").write_text('{"x": 9}')
+    clear_cache_memo()
+    assert cache_read(tmp_path, key) is None
+
+
+# ------------------------------------------------------------ record memo
+def test_record_memo_is_lru_bounded():
+    memo = RecordMemo(cap=2)
+    memo.put(("d", "a"), {"v": 1})
+    memo.put(("d", "b"), {"v": 2})
+    assert memo.get(("d", "a")) == {"v": 1}   # refresh "a"
+    memo.put(("d", "c"), {"v": 3})            # evicts "b", the LRU entry
+    assert memo.get(("d", "b")) is None
+    assert memo.get(("d", "a")) == {"v": 1}
+    assert memo.get(("d", "c")) == {"v": 3}
+    assert memo.stats() == {"entries": 2, "cap": 2, "hits": 3,
+                            "misses": 1, "evictions": 1}
+
+
+def test_record_memo_is_thread_safe():
+    memo = RecordMemo(cap=8)
+
+    def hammer(tag):
+        for i in range(500):
+            memo.put((tag, str(i)), {"v": i})
+            memo.get((tag, str(i)))
+
+    threads = [threading.Thread(target=hammer, args=(str(t),))
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(memo) <= 8
+
+
+def test_memo_counters_surface_in_sweep_stats(tmp_path):
+    clear_cache_memo()
+    spec = open_spec(policies=("fifo",))
+    cold = run_sweep(spec, cache_dir=tmp_path)
+    assert cold.stats["memo_entries"] >= 1
+    warm = run_sweep(spec, cache_dir=tmp_path)
+    assert warm.stats["memo_hits"] >= 1
+    assert "memo_evictions" in warm.stats
+
+
+# --------------------------------------------------- chunking + validation
+def test_chunk_size_policy():
+    assert chunk_size_for(0, 2) == 1
+    assert chunk_size_for(12, 2) == 2        # ceil(12 / (4*2))
+    assert chunk_size_for(10_000, 2) == 64   # clamped to the frame cap
+    assert chunk_size_for(100, 4, chunk_cells=7) == 7   # explicit pin
+    assert chunk_size_for(100, 4, chunk_cells=0) == 1
+
+
+def test_queue_dispatcher_rejects_executor_cells():
+    with pytest.raises(ValueError, match="DES-only"):
+        QueueDispatcher([{"machine": "executor", "key": "k"}])
+
+
+def test_run_sweeps_rejects_executor_specs_on_queue():
+    spec = SweepSpec(scenarios=(TraceReplay(trace=TRACE, specs=TINY,
+                                            name="tiny"),),
+                     policies=("fifo",), machine="executor")
+    with pytest.raises(ValueError, match="DES-only"):
+        run_sweeps([spec], dispatcher="queue")
+
+
+def test_spawn_mode_validation():
+    with pytest.raises(ValueError, match="spawn_mode"):
+        QueueDispatcher([], spawn_mode="bogus")
+    with pytest.raises(ValueError, match="subprocess"):
+        QueueDispatcher([], worker_argv_extra=["--die-after", "1"],
+                        spawn_mode="fork")
+
+
+def test_unknown_dispatcher_rejected():
+    with pytest.raises(ValueError, match="dispatcher"):
+        run_sweeps([open_spec()], dispatcher="carrier-pigeon")
