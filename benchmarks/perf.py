@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import shutil
 import subprocess
 import sys
@@ -123,6 +124,35 @@ def _engine_label(engine: str) -> str:
     return "python" if engine == "python" else f"compiled-{backend_name()}"
 
 
+_backend_detail_memo = None
+
+
+def _backend_detail() -> str:
+    """Toolchain provenance of the active compiled backend: the exact cc
+    version line (native), numba's version (jit), or "" for the
+    interpreted twin, which has no toolchain to record."""
+    global _backend_detail_memo
+    if _backend_detail_memo is not None:
+        return _backend_detail_memo
+    backend = backend_name()
+    if backend == "native":
+        cc = os.environ.get("CC", "cc")
+        try:
+            line = subprocess.run(
+                [cc, "--version"], capture_output=True, text=True,
+                check=True).stdout.splitlines()[0].strip()
+        except Exception:
+            line = f"{cc} (version unavailable)"
+        detail = line
+    elif backend == "numba":
+        import numba
+        detail = f"numba {numba.__version__}"
+    else:
+        detail = ""
+    _backend_detail_memo = detail
+    return detail
+
+
 def _throughput(label: str, build, repeat: int, engine: str,
                 smoke: bool) -> dict:
     """Best-of-``repeat`` blocks/sec for one simulation builder.
@@ -193,7 +223,24 @@ def _throughput_rows(smoke: bool, repeat: int, engines) -> list:
                         engine, smoke),
             _throughput("mgk_saturated", mgk, repeat, engine, smoke),
         ]
+    if "compiled" in engines:
+        rows.append(_segment_exit_row(mgk))
     return rows
+
+
+def _segment_exit_row(build) -> dict:
+    """Exit-code histogram of one compiled-engine closed-loop run — the
+    boundary-amortization measurement itself.  Each count is one engine
+    segment and the code says why it ended (0/1 done, 2 completion
+    handoff, 5 decision-buffer regrow, 7 variate-pool regrow); fewer
+    segments per run means fewer Python boundary crossings."""
+    sim, until = build(FastSimulator)
+    sim.run(until=until)
+    exits = {str(code): n for code, n in sorted(sim.segment_exits.items())}
+    return {"name": "segment_exits.mgk_saturated",
+            "engine": _engine_label("compiled"),
+            "exits": exits,
+            "segments": sum(sim.segment_exits.values())}
 
 
 #: Worker count of the dispatch lane — mirrors ``make smoke-dispatch``
@@ -344,15 +391,29 @@ def run(smoke: bool = False, jobs: int = 4, repeat: int = 2,
     rows += _sweep_rows(smoke, jobs, repeat,
                         engine=("python" if engine == "python" else "auto"))
     rows += _dispatch_rows(smoke, repeat)
+    detail = _backend_detail()
+    if detail:
+        for row in rows:
+            if str(row.get("engine", "")).startswith("compiled"):
+                row["backend_detail"] = detail
+    commit = _git_commit()
     payload = {
-        "commit": _git_commit(),
+        "commit": commit,
         "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "smoke": smoke,
         "compiled_backend": backend_name(),
-        "baseline": dict(BASELINE),
         "history": [dict(block) for block in HISTORY],
         "rows": rows,
     }
+    # A baseline block pins reference measurements to an exact commit;
+    # a dirty or unknown tree has no such commit to attribute them to,
+    # so the pin is refused rather than written with false provenance.
+    if commit != "unknown" and not commit.endswith("-dirty"):
+        payload["baseline"] = dict(BASELINE)
+    else:
+        payload["baseline_omitted"] = (
+            "tree is dirty or of unknown commit: baseline blocks are "
+            "only pinned from a clean checkout")
     out.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
     return payload
 

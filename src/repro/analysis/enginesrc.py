@@ -25,7 +25,7 @@ CANONICAL_ARRAYS: Tuple[str, ...] = (
     "si", "sd", "ci", "cf", "ri", "rf", "psi", "psf", "bs", "sl",
     "smi", "smf", "hi", "hf", "tri", "trf", "dci", "dcf", "pri", "prf",
     "act", "q", "rwi", "rwf", "newc", "cand", "crem",
-    "np_pool", "bt_pool",
+    "np_pool", "bt_pool", "srci", "srcf",
 )
 
 #: dtype kind per state array: "i" = int64, "f" = float64.
@@ -35,6 +35,7 @@ ARRAY_DTYPES: Dict[str, str] = {
     "hi": "i", "hf": "f", "tri": "i", "trf": "f", "dci": "i", "dcf": "f",
     "pri": "i", "prf": "f", "act": "i", "q": "i", "rwi": "i", "rwf": "f",
     "newc": "i", "cand": "i", "crem": "f", "np_pool": "f", "bt_pool": "f",
+    "srci": "i", "srcf": "f",
 }
 
 #: twin function -> C function where stripping the underscore isn't it.

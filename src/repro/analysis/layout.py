@@ -56,7 +56,7 @@ _FULL_FAMILIES = ("SI", "SD", "CI", "CF", "RI", "RF", "PI", "PF",
 _COL_FAMILY: Dict[str, Optional[str]] = {
     "si": "SI", "sd": "SD", "ci": "CI", "cf": "CF", "ri": "RI",
     "rf": "RF", "psi": "PI", "psf": "PF", "smi": "SMI", "hi": "HI",
-    "hf": "HF", "rwf": "RW",
+    "hf": "HF", "rwf": "RW", "srci": "SRC",
 }
 
 #: ``S_*`` abbreviation per canonical array.

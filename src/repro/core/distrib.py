@@ -48,6 +48,7 @@ timeouts, stall detection) and are baselined individually in
 from __future__ import annotations
 
 import dataclasses
+import gc
 import hashlib
 import heapq
 import itertools
@@ -93,8 +94,16 @@ def nan_to_null(obj):
 
 def canonical_digest(payload: dict) -> str:
     """SHA-256 over the canonical (sorted, compact, NaN-free) JSON form."""
-    blob = json.dumps(nan_to_null(payload), sort_keys=True,
-                      separators=(",", ":"), allow_nan=False)
+    try:
+        # Fast path: NaN-free payloads (the overwhelming majority) dump
+        # directly; ``allow_nan=False`` makes json raise on the rest, and
+        # only those pay the recursive nan_to_null rebuild.  Identical
+        # bytes either way (tuples serialize as JSON arrays regardless).
+        blob = json.dumps(payload, sort_keys=True,
+                          separators=(",", ":"), allow_nan=False)
+    except ValueError:
+        blob = json.dumps(nan_to_null(payload), sort_keys=True,
+                          separators=(",", ":"), allow_nan=False)
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
@@ -105,7 +114,15 @@ def record_text(record: dict) -> str:
     these bytes, so records are byte-identical across dispatchers and the
     equivalence gate can compare text, not just parsed floats.
     """
-    return json.dumps(nan_to_null(record), sort_keys=True, allow_nan=False)
+    try:
+        # Same fast path as canonical_digest: NaN-free records (the
+        # common case — only nothing-finished cells carry NaN metrics)
+        # skip the recursive rebuild; json raises on NaN/inf and the
+        # exceptional records take nan_to_null.
+        return json.dumps(record, sort_keys=True, allow_nan=False)
+    except ValueError:
+        return json.dumps(nan_to_null(record), sort_keys=True,
+                          allow_nan=False)
 
 
 #: Entry cap of the in-memory record mirror.  Multi-spec batch drivers
@@ -353,6 +370,25 @@ def scavenge_cache_dir(cache_dir: Optional[Path]) -> int:
 # =====================================================================
 
 
+def _cell_record(res, solo: Dict[str, float]) -> dict:
+    """Assemble the label-free cell record from a :class:`SimResult`."""
+    solo_by_key = {k: solo[res.name[k]] for k in res.turnaround}
+    window = evaluate_window(
+        res.turnaround, solo_by_key, unfinished=res.unfinished,
+        end_time=res.end_time, makespan=res.makespan,
+        utilization=res.utilization)
+    return {
+        # WindowMetrics is a flat scalar dataclass; vars() is asdict()
+        # without the per-field deepcopy recursion (hot: once per cell).
+        "window": dict(vars(window)),
+        "turnaround": dict(res.turnaround),
+        "finish": dict(res.finish),
+        "unfinished": list(res.unfinished),
+        "names": dict(res.name),
+        "arrival": dict(res.arrival),
+    }
+
+
 def run_des_cell(payload: dict) -> dict:
     """One DES simulation, evaluated over its observation window.
 
@@ -378,21 +414,113 @@ def run_des_cell(payload: dict) -> dict:
         arrival_source=source,
         engine=payload.get("engine"),
     )
-    solo_by_key = {k: solo[res.name[k]] for k in res.turnaround}
-    window = evaluate_window(
-        res.turnaround, solo_by_key, unfinished=res.unfinished,
-        end_time=res.end_time, makespan=res.makespan,
-        utilization=res.utilization)
-    return {
-        # WindowMetrics is a flat scalar dataclass; vars() is asdict()
-        # without the per-field deepcopy recursion (hot: once per cell).
-        "window": dict(vars(window)),
-        "turnaround": dict(res.turnaround),
-        "finish": dict(res.finish),
-        "unfinished": list(res.unfinished),
-        "names": dict(res.name),
-        "arrival": dict(res.arrival),
-    }
+    return _cell_record(res, solo)
+
+
+def _same_body(a: dict, b: dict) -> bool:
+    """Whether two open-loop DES payloads share one simulation *body* —
+    arrivals, solo oracle, seed, n_sm, until, engine — so only the
+    policy/predictor axes differ.  Identity (not equality) on the shared
+    objects: sibling payloads hold fresh list shells around one
+    workload's :class:`Arrival` objects, and pickle preserves that
+    sharing within one chunk frame.  Oracle-reordered siblings (SJF/LJF)
+    share the same arrivals in a different order — order is part of the
+    body, so the element-wise zip rejects them."""
+    if a.get("closed_loop") or b.get("closed_loop"):
+        return False
+    arr_a, arr_b = a["arrivals"], b["arrivals"]
+    return (len(arr_a) == len(arr_b)
+            and all(x is y for x, y in zip(arr_a, arr_b))
+            and a["solo"] is b["solo"]
+            and a["seed"] == b["seed"]
+            and a["n_sm"] == b["n_sm"]
+            and a["until"] == b["until"]
+            and a.get("engine") == b.get("engine"))
+
+
+def _run_des_cell_fast(payload: dict, proto: Optional[dict]) -> dict:
+    """:func:`run_des_cell` for the chunk runner: result-only mode.
+
+    Compiled open-loop cells build the simulator directly (the exact
+    construction :func:`~repro.core.simulator.simulate` performs) so the
+    chunk runner can enable the two in-chunk amortizations: the lean
+    terminal scatter (commit only what the record reads) and the shared
+    staging prototype ``proto`` (siblings memcpy the staged arrays
+    instead of rebuilding — DESIGN.md Section 13).  Everything else —
+    closed-loop cells, the reference engine — takes the plain per-cell
+    path; records are byte-identical either way.
+    """
+    from .fastsim import FastSimulator, default_engine
+
+    engine = payload.get("engine") or default_engine()
+    if engine != "compiled" or payload.get("closed_loop"):
+        return run_des_cell(payload)
+    solo: Dict[str, float] = payload["solo"]
+    sim = FastSimulator(
+        payload["arrivals"], make_policy(payload["policy"]),
+        n_sm=payload["n_sm"], seed=payload["seed"],
+        oracle_runtimes=solo, predictor=payload["predictor"])
+    sim._lean_result = True
+    if proto is not None:
+        sim._stage_proto = proto
+    return _cell_record(sim.run(until=payload["until"]), solo)
+
+
+def run_des_chunk(payloads: Sequence[dict],
+                  cache_dir: Optional[Path] = None, *,
+                  read_cache: bool = True,
+                  on_computed: Optional[Callable[[str], None]] = None
+                  ) -> Dict[str, dict]:
+    """Run a whole chunk of DES cell payloads in one call.
+
+    The chunk is the amortization unit of both dispatch tiers: one
+    packfile write for all computed records (instead of one file per
+    cell), and one staging prototype shared by each run of adjacent
+    same-body payloads (the sweep emits policy siblings adjacently, and
+    LPT tie-breaks preserve that adjacency).  ``read_cache=False`` skips
+    the per-cell cache probe — the local dispatcher resolves hits before
+    queueing, so its pending cells are known misses.  ``on_computed`` is
+    called with the key after each computed (non-hit) cell; the worker
+    loop uses it for ``die_after`` failure injection.  Records are
+    byte-identical to per-cell :func:`run_des_cell` runs.
+    """
+    records: Dict[str, dict] = {}
+    fresh: Dict[str, dict] = {}
+    proto: dict = {}
+    prev: Optional[dict] = None
+    # Cycle collection off for the chunk: each cell retires one simulator
+    # object graph (cyclic through core.bind), and letting the collector
+    # walk those mid-chunk costs ~10% of tiny-cell throughput.  The
+    # garbage is bounded by the chunk and collected normally afterwards.
+    gc_was_enabled = gc.isenabled()
+    if gc_was_enabled:
+        gc.disable()
+    try:
+        for payload in payloads:
+            key = payload["key"]
+            if read_cache:
+                hit = cache_read(cache_dir, key)
+                if hit is not None:
+                    records[key] = hit
+                    continue
+            if prev is None or not _same_body(prev, payload):
+                proto = {}
+            prev = payload
+            records[key] = fresh[key] = _run_des_cell_fast(payload, proto)
+            if on_computed is not None:
+                on_computed(key)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    write_pack(cache_dir, fresh)
+    return records
+
+
+def _run_chunk(args: Tuple[Sequence[dict], Optional[Path]]
+               ) -> Dict[str, dict]:
+    """Module-level chunk entry point (pickles into pool workers)."""
+    payloads, cache_dir = args
+    return run_des_chunk(payloads, cache_dir, read_cache=False)
 
 
 def run_executor_cell(payload: dict) -> dict:
@@ -535,12 +663,19 @@ def recv_frame(sock: socket.socket) -> Optional[dict]:
 
 #: Upper bound on cells per task frame; chunks smaller than this are used
 #: when the worklist is short so every worker stays busy (see
-#: :func:`chunk_size_for`).
-DEFAULT_CHUNK_MAX = 64
+#: :func:`chunk_size_for`).  384 balances the parent's per-turn cost
+#: (each chunk is one result frame + one pack ingest, and with the
+#: in-engine chunk runner the parent turn is a visible fraction of a
+#: tiny-cell sweep) against re-dispatch granularity when a worker dies
+#: mid-chunk and the task-frame size (a tiny-cell chunk of 384 is well
+#: under 100 ms of work and ~100 KB of frame).
+DEFAULT_CHUNK_MAX = 384
 
-#: A chunk target of ~4 chunks per worker keeps the tail short: the last
-#: chunks to finish are at most 1/4 of a worker's share.
-_CHUNKS_PER_WORKER = 4
+#: A chunk target of ~2 chunks per worker: LPT puts the heavy cells in
+#: the first chunk of each worker, so the second-round chunks form the
+#: tail — at most half a worker's share, while every committed chunk
+#: amortizes one parent ingest turn over more cells.
+_CHUNKS_PER_WORKER = 2
 
 
 def chunk_size_for(n_cells: int, workers: int,
@@ -1148,28 +1283,25 @@ def worker_serve(host: str, port: int, *,
                     return 0
                 if t != "task":
                     continue
-                records: Dict[str, dict] = {}
-                fresh: Dict[str, dict] = {}
-                for payload in frame["cells"]:
-                    key = payload["key"]
-                    hit = cache_read(cache_dir, key)
-                    if hit is not None:
-                        records[key] = hit
-                        continue
-                    payload = dict(payload)
-                    payload["cache_dir"] = None
-                    records[key] = fresh[key] = run_des_cell(payload)
+
+                def _tick(_key: str) -> None:
+                    nonlocal computed
                     computed += 1
                     if die_after is not None and computed >= die_after:
                         # Failure injection: a worker crashing mid-chunk
                         # (no result frame ever sent).
                         os._exit(17)
-                # One packed local write per chunk, then one result frame.
-                write_pack(cache_dir, fresh)
+
+                # The whole chunk runs in-engine (shared staging
+                # prototype, lean result scatter), then one packed local
+                # write and one result frame.
+                before = computed
+                records = run_des_chunk(frame["cells"], cache_dir,
+                                        on_computed=_tick)
                 send_frame(sock, {"t": "result", "id": frame.get("id"),
                                   "records": records}, send_lock)
                 log(f"chunk of {len(records)} done "
-                    f"({len(fresh)} computed)")
+                    f"({computed - before} computed)")
         finally:
             stop_hb.set()
     finally:
@@ -1197,6 +1329,7 @@ __all__ = [
     "recv_frame",
     "run_cell",
     "run_des_cell",
+    "run_des_chunk",
     "run_executor_cell",
     "scavenge_cache_dir",
     "send_frame",

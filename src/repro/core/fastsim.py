@@ -36,7 +36,7 @@ import itertools
 import math
 import os
 from collections import deque
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -59,6 +59,7 @@ from .policies import (
     SRTFZeroSampling,
 )
 from .predictor import EWMAPredictor, PerSMState, SimpleSlicingPredictor
+from .machine import KernelRun
 from .simulator import (
     _ARRIVAL,
     _BLOCK_END,
@@ -170,6 +171,31 @@ class FastSimulator(Simulator):
         #: on buffer-headroom exits (decision volume is the one record
         #: stream with no cheap a-priori bound).
         self._dec_cap = 4096
+        #: Staged-arrival window handed to a lowered closed-loop source
+        #: per rebuild (tests shrink it to force pool-exhaustion resumes).
+        self._stage_cap = 4096
+        #: uid -> staged KernelRun, reused across rebuilds (uid, order and
+        #: RNG draws are all stable under restaging).
+        self._staged_memo: Dict[str, KernelRun] = {}
+        self._build_staged: List[KernelRun] = []
+        self._build_staged_base = 0
+        self._build_lower_mode: Optional[str] = None
+        self._build_n_tenants = 0
+        #: Think-time tenant parked by a pool-exhaustion exit (-1 = none).
+        self._src_pend = -1
+        #: Exit-code -> count over every engine segment this simulator
+        #: ran (the python-boundary crossing histogram; see the twin's
+        #: module docstring for the code table).
+        self.segment_exits: Dict[int, int] = {}
+        #: Result-only mode (the sweep chunk runner): terminal exits take
+        #: the lean scatter — the simulator is NOT a valid mid-run
+        #: reference afterwards, only its result fields are.
+        self._lean_result = False
+        #: Shared staging prototype (chunk runner, DESIGN.md Section 13):
+        #: a dict shared by sibling cells built from the same body
+        #: (arrivals, seed, n_sm, until, oracle) so later siblings clone
+        #: the staged arrays instead of rebuilding them.
+        self._stage_proto: Optional[dict] = None
 
     # ------------------------------------------------------------- driver
     def _engine_supported(self) -> bool:
@@ -202,19 +228,38 @@ class FastSimulator(Simulator):
         if advance is None:
             return Simulator.run(self, until)
         resume = False
+        first = True
         while True:
-            state, keys = self._build_state(until, resume)
+            state = None
+            if first and self._stage_proto is not None:
+                state, keys = self._proto_clone(until)
+            if state is None:
+                state, keys = self._build_state(until, resume)
+                if first and self._stage_proto is not None:
+                    self._proto_store(state, keys, until, resume)
+            first = False
             resume = False
             rc = int(advance(state))
+            self.segment_exits[rc] = self.segment_exits.get(rc, 0) + 1
+            if (rc == 0 or rc == 1) and self._lean_result:
+                self._scatter_result(state, keys)
+                break
             self._scatter(state, keys)
             if rc == 0 or rc == 1:
                 break
             if rc == 2:
-                # A kernel finished with an arrival source attached: the
-                # reference calls _feed_completion between KernelEnded and
-                # the machine-wide fan-out, so the engine exits there and
-                # re-enters with RESUME (= run the pending fan-out first).
+                # A kernel finished with a python-mediated arrival source
+                # attached: the reference calls _feed_completion between
+                # KernelEnded and the machine-wide fan-out, so the engine
+                # exits there and re-enters with RESUME (= run the
+                # pending fan-out first).
                 self._feed_completion(keys[int(state[tw.S_SI][tw.SI_EXIT_RUN])])
+                resume = True
+            elif rc == 7:
+                # Lowered source ran its staged variate pool dry mid
+                # injection: the rebuild stages a fresh window and the
+                # engine resumes the interrupted release before the
+                # pending fan-out.
                 resume = True
             elif rc == 5:
                 self._dec_cap *= 2
@@ -222,12 +267,162 @@ class FastSimulator(Simulator):
             # state on rebuild, so re-entry always has fresh headroom.
         return SimResult(self)
 
+    # ------------------------------------------------- staging prototype
+    def _proto_fits(self, pol: Optional[int]) -> bool:
+        """Whether this simulator's policy/predictor state is covered by
+        the prototype patch set: a policy the clone path knows how to
+        re-apply, still in its freshly-constructed (empty) state, over a
+        predictor with no per-kernel state.  SJF/LJF bake per-run sort
+        keys (``RF_SJFKEY``) into the arrays, so they neither seed nor
+        clone a prototype."""
+        if pol is None or pol == tw.POL_SJF or pol == tw.POL_LJF:
+            return False
+        if self.predictor._state:
+            return False
+        policy = self.core.policy
+        if pol in _SRTF_FAMILY and (policy.eligible or policy.sample_queue
+                                    or policy.sampling is not None):
+            return False
+        if pol == tw.POL_MPMAX and policy._caps:
+            return False
+        if pol == tw.POL_SRTF_ADAPTIVE and (policy._caps
+                                            or policy._excl_pred):
+            return False
+        return True
+
+    def _proto_store(self, state: tuple, keys: List[str],
+                     until: Optional[float], resume: bool) -> None:
+        """Seed the group's staging prototype from a just-built state.
+
+        Only a fresh, source-free, record-free first segment is general
+        enough for siblings to clone; anything else leaves the prototype
+        empty and every sibling builds normally."""
+        proto = self._stage_proto
+        if proto is None or proto.get("state") is not None:
+            return
+        if (resume or self.now != 0.0 or self._arrival_source is not None
+                or self._build_lower_mode is not None
+                or self.trace is not None or self.decisions is not None
+                or self.predictions is not None):
+            return
+        if not self._proto_fits(_POLICY_IDS.get(type(self.core.policy))):
+            return
+        proto["state"] = tuple(arr.copy() for arr in state)
+        proto["keys"] = list(keys)
+        proto["until"] = until
+
+    def _proto_clone(self, until: Optional[float]):
+        """Clone the group's staging prototype instead of rebuilding.
+
+        The chunk runner guarantees every simulator sharing one proto
+        dict was constructed from the same body (arrivals, seed, n_sm,
+        until, oracle runtimes); only the freshly-built policy/predictor
+        differ.  The clone memcpys the staged arrays and re-applies
+        exactly the policy/predictor-dependent entries ``_build_state``
+        writes; a configuration outside the patch set falls back to a
+        normal build (returns ``(None, None)``)."""
+        proto = self._stage_proto
+        if (proto.get("state") is None or proto["until"] != until
+                or self._arrival_source is not None
+                or self.trace is not None or self.decisions is not None
+                or self.predictions is not None):
+            return None, None
+        policy = self.core.policy
+        predictor = self.predictor
+        pol = _POLICY_IDS.get(type(policy))
+        if not self._proto_fits(pol):
+            return None, None
+        # One scratch state per proto, refreshed in place: siblings run
+        # strictly serially in the chunk runner and read everything they
+        # need out of the arrays before the next cell starts, so reusing
+        # the buffers (same tuple object — the native backend caches the
+        # ctypes pointers by tuple identity) is safe and skips 31
+        # allocations per sibling.
+        state = proto.get("scratch")
+        if state is None:
+            state = tuple(arr.copy() for arr in proto["state"])
+            proto["scratch"] = state
+        else:
+            for dst, src in zip(state, proto["state"]):
+                np.copyto(dst, src)
+        si, ci, cf = state[0], state[2], state[3]
+        si[tw.SI_SEQ] = next(self._seq)
+        si[tw.SI_SHARING] = 0
+        ci[tw.CI_POLICY] = pol
+        ci[tw.CI_UNLIMITED] = 1 if policy.unlimited_caps else 0
+        ci[tw.CI_DRIVE_PRED] = 1 if self._drive_predictor else 0
+        ci[tw.CI_FIXED_CAP] = 0
+        ci[tw.CI_SAMPLE_SM] = 0
+        ci[tw.CI_SHARED_RES] = 0
+        ci[tw.CI_PRED_KIND] = 0
+        cf[tw.CF_THRESHOLD] = 0.0
+        cf[tw.CF_HYSTERESIS] = 0.0
+        cf[tw.CF_ALPHA] = 0.0
+        if pol == tw.POL_FIFO_CAP:
+            ci[tw.CI_FIXED_CAP] = policy.cap
+        if pol in _SRTF_FAMILY:
+            ci[tw.CI_SAMPLE_SM] = policy.sample_sm
+        if pol == tw.POL_SRTF_ADAPTIVE:
+            ci[tw.CI_SHARED_RES] = policy.shared_residency
+            cf[tw.CF_THRESHOLD] = policy.unfairness_threshold
+            cf[tw.CF_HYSTERESIS] = policy.hysteresis
+            si[tw.SI_SHARING] = 1 if policy.sharing else 0
+        if type(predictor) is EWMAPredictor:
+            ci[tw.CI_PRED_KIND] = 1
+            cf[tw.CF_ALPHA] = predictor.alpha
+        self._build_staged = []
+        self._build_lower_mode = None
+        return state, proto["keys"]
+
     # -------------------------------------------------------------- build
+    def _stage_source(self) -> Tuple[List[KernelRun], Optional[dict]]:
+        """Stage a window of pre-drawn future arrivals from a lowered
+        closed-loop source.
+
+        Returns ``(staged_runs, lowering)``; ``(.., None)`` when the
+        attached source (if any) is not lowerable and completions must
+        keep crossing the python boundary (exit 2).  Staged KernelRuns
+        carry their final uid/order/RNG state already — the engine only
+        decides WHEN (and for think-time, for which tenant) each one is
+        injected."""
+        source = self._arrival_source
+        if source is None or self._source_time_scale != 1.0:
+            return [], None
+        stage = getattr(source, "engine_stage", None)
+        if stage is None:
+            return [], None
+        lower = stage(self._stage_cap)
+        if lower is None:
+            return [], None
+        base = next(self._arrival_order)
+        self._arrival_order = itertools.count(base)
+        memo = self._staged_memo
+        times = lower.get("times")
+        staged: List[KernelRun] = []
+        for k, uid in enumerate(lower["uids"]):
+            run = memo.get(uid)
+            if run is None:
+                # Provisional arrival time; _src_inject decides the real
+                # one (clipped to `now`) and _scatter copies it back.
+                at = times[k] if times is not None else 0.0
+                run = KernelRun(uid, lower["specs"][k], at, base + k)
+                self._init_kernel_rng(run)
+                memo[uid] = run
+            staged.append(run)
+        self._build_staged_base = base
+        return staged, lower
+
     def _build_state(self, until: Optional[float],
                      resume: bool) -> Tuple[tuple, List[str]]:
         """Gather all simulation state into the twin's array layout."""
         n_sm = self.n_sm
         runs = sorted(self.runs.values(), key=lambda r: r.order)
+        staged, lower = self._stage_source()
+        n_real = len(runs)
+        if staged:
+            runs = runs + staged
+        self._build_staged = staged
+        self._build_lower_mode = None if lower is None else lower["mode"]
         keys = [run.key for run in runs]
         index = {key: i for i, key in enumerate(keys)}
         n = len(runs)
@@ -267,7 +462,11 @@ class FastSimulator(Simulator):
         rec_pred = self.predictions is not None
         remaining_issue = sum(r.spec.num_blocks - r.issued for r in runs)
         remaining_done = sum(r.spec.num_blocks - r.done for r in runs)
-        heap_cap = max(256, 2 * len(events) + 9 * n_sm + 16)
+        src_reserve = 0
+        if lower is not None:
+            src_reserve = (lower["population"] if lower["mode"] == "mgk"
+                           else 1)
+        heap_cap = max(256, 2 * len(events) + 9 * n_sm + 16 + src_reserve)
         trace_cap = remaining_issue + 8 * n_sm + 32 if rec_trace else 1
         dec_cap = max(self._dec_cap, 9 * n_sm + 64) if rec_dec else 1
         pred_cap = remaining_done + 16 if rec_pred else 1
@@ -281,6 +480,10 @@ class FastSimulator(Simulator):
         ci[tw.CI_REC_DEC] = 1 if rec_dec else 0
         ci[tw.CI_REC_PRED] = 1 if rec_pred else 0
         ci[tw.CI_HAS_SOURCE] = 1 if self._arrival_source is not None else 0
+        if lower is not None:
+            ci[tw.CI_SRC_MODE] = (tw.SRCMODE_MGK if lower["mode"] == "mgk"
+                                  else tw.SRCMODE_THINK)
+            ci[tw.CI_SRC_RESERVE] = src_reserve
         ci[tw.CI_HEAP_CAP] = heap_cap
         ci[tw.CI_TRACE_CAP] = trace_cap
         ci[tw.CI_DEC_CAP] = dec_cap
@@ -326,6 +529,7 @@ class FastSimulator(Simulator):
         ri[:, tw.RI_MPCAP] = -1
         ri[:, tw.RI_ADPCAP] = -1
         ri[:, tw.RI_SYNCED] = -1
+        ri[:, tw.RI_TENANT] = -1
         for i, run in enumerate(runs):
             spec = run.spec
             ri[i, tw.RI_NUMB] = spec.num_blocks
@@ -390,6 +594,44 @@ class FastSimulator(Simulator):
         bt_pool = (np.concatenate(bt_parts) if bt_parts
                    else np.zeros(0, np.float64))
 
+        # -- lowered arrival source (staged variate pool) -----------------
+        n_staged = n - n_real
+        n_tenants = 0
+        if lower is not None and lower["mode"] == "think":
+            n_tenants = len(lower["rounds_done"])
+        self._build_n_tenants = n_tenants
+        srci = np.zeros(tw.SRC_RD0 + n_tenants, np.int64)
+        srcf = np.zeros(max(1, n_staged), np.float64)
+        srci[tw.SRC_PEND] = -1
+        if lower is not None:
+            srci[tw.SRC_NSTAGED] = n_staged
+            srci[tw.SRC_BASE] = n_real
+            srci[tw.SRC_MORE] = 1 if lower["more"] else 0
+            if n_staged:
+                ri[n_real:, tw.RI_STAGED] = 1
+                ri[n_real:, tw.RI_SRC] = 1
+            if lower["mode"] == "mgk":
+                srci[tw.SRC_INSYS] = lower["in_system"]
+                srci[tw.SRC_POP] = lower["population"]
+                if n_staged:
+                    srcf[:n_staged] = lower["times"]
+                live = lower["live"]
+                for i in range(n_real):
+                    if keys[i] in live:
+                        ri[i, tw.RI_SRC] = 1
+            else:
+                srci[tw.SRC_NROUNDS] = lower["n_rounds"]
+                srci[tw.SRC_PEND] = self._src_pend
+                for j, done in enumerate(lower["rounds_done"]):
+                    srci[tw.SRC_RD0 + j] = done
+                if n_staged:
+                    srcf[:n_staged] = lower["delays"]
+                tenants = lower["tenants"]
+                for i in range(n_real):
+                    ten = tenants.get(keys[i])
+                    if ten is not None:
+                        ri[i, tw.RI_TENANT] = ten
+
         # -- policy-specific state ---------------------------------------
         queue = np.zeros(n + 1, np.int64)
         if pol == tw.POL_MPMAX:
@@ -437,7 +679,7 @@ class FastSimulator(Simulator):
         state = (si, sd, ci, cf, ri, rf, psi, psf, bs, sl, smi, smf,
                  heap_i, heap_f, tri, trf, dci, dcf, pri, prf,
                  act, queue, rwi, rwf, newc, cand, crem,
-                 noise_pool, bt_pool)
+                 noise_pool, bt_pool, srci, srcf)
         return state, keys
 
     # ------------------------------------------------------------ scatter
@@ -449,7 +691,8 @@ class FastSimulator(Simulator):
         SM / policy / predictor state the reference loop would hold)."""
         (si, sd, ci, cf, ri, rf, psi, psf, bs, sl, smi, smf,
          heap_i, heap_f, tri, trf, dci, dcf, pri, prf,
-         act, queue, rwi, rwf, newc, cand, crem, _np_pool, _bt_pool) = state
+         act, queue, rwi, rwf, newc, cand, crem, _np_pool, _bt_pool,
+         srci, _srcf) = state
         n_sm = self.n_sm
         policy = self.core.policy
         predictor = self.predictor
@@ -477,9 +720,48 @@ class FastSimulator(Simulator):
                 events.append((t, kind, seq, int(heap_i[i, tw.HI_A])))
         self._events = events
 
+        # -- lowered arrival source: commit consumed stagings -------------
+        # Engine-injected staged runs enter self.runs in injection order
+        # (same dict insertion order the reference's inject_arrival would
+        # produce); the source's python state is rolled forward so the
+        # simulator remains a valid reference Simulator mid-run.
+        staged = self._build_staged
+        mode = self._build_lower_mode
+        n_live = len(keys)
+        if mode is not None:
+            consumed = int(srci[tw.SRC_NEXT])
+            n_live = len(keys) - len(staged) + consumed
+            for k in range(consumed):
+                run = staged[k]
+                run.arrival_time = float(rf[n_live - consumed + k,
+                                            tw.RF_ARRT])
+                self.runs[run.key] = run
+                self._staged_memo.pop(run.key, None)
+            if staged:
+                self._arrival_order = itertools.count(
+                    self._build_staged_base + consumed)
+            source = self._arrival_source
+            if mode == "mgk":
+                live = {keys[i] for i in range(n_live)
+                        if ri[i, tw.RI_SRC]
+                        and rf[i, tw.RF_FIN] != rf[i, tw.RF_FIN]}
+                source.engine_commit(
+                    consumed, int(srci[tw.SRC_INSYS]), live)
+            else:
+                self._src_pend = int(srci[tw.SRC_PEND])
+                nt = self._build_n_tenants
+                rounds = [int(v)
+                          for v in srci[tw.SRC_RD0:tw.SRC_RD0 + nt]]
+                tenants = {keys[i]: int(ri[i, tw.RI_TENANT])
+                           for i in range(n_live)
+                           if ri[i, tw.RI_TENANT] >= 0
+                           and rf[i, tw.RF_FIN] != rf[i, tw.RF_FIN]}
+                source.engine_commit(consumed, rounds, tenants)
+
         # -- runs ---------------------------------------------------------
         finished_now: List[str] = []
-        for i, key in enumerate(keys):
+        for i in range(n_live):
+            key = keys[i]
             run = self.runs[key]
             run.issued = int(ri[i, tw.RI_ISSUED])
             run.done = int(ri[i, tw.RI_DONE])
@@ -609,6 +891,37 @@ class FastSimulator(Simulator):
                 predictions.append(PredictionRecord(
                     keys[int(pri[j, 0])], int(pri[j, 1]),
                     float(prf[j, 0]), int(pri[j, 2]), float(prf[j, 1])))
+
+    def _scatter_result(self, state: tuple, keys: List[str]) -> None:
+        """Terminal-exit scatter committing only what :class:`SimResult`
+        and ``evaluate_window`` read: now, busy_time, the staged-run
+        commit, and per-run issued/done/finish/first-issue.  Skips the
+        heap, SM pools, policy/predictor state, record streams and
+        source ``engine_commit`` — afterwards ``self`` is NOT a valid
+        mid-run reference, only its result fields are."""
+        si, sd = state[0], state[1]
+        ri, rf = state[4], state[5]
+        srci = state[29]
+        self.now = float(sd[tw.SD_NOW])
+        self.busy_time = float(sd[tw.SD_BUSY])
+        staged = self._build_staged
+        n_live = len(keys)
+        if self._build_lower_mode is not None:
+            consumed = int(srci[tw.SRC_NEXT])
+            n_live = len(keys) - len(staged) + consumed
+            for k in range(consumed):
+                run = staged[k]
+                run.arrival_time = float(rf[n_live - consumed + k,
+                                            tw.RF_ARRT])
+                self.runs[run.key] = run
+        for i in range(n_live):
+            run = self.runs[keys[i]]
+            run.issued = int(ri[i, tw.RI_ISSUED])
+            run.done = int(ri[i, tw.RI_DONE])
+            fin = rf[i, tw.RF_FIN]
+            run.finish_time = float(fin) if fin == fin else None
+            first = rf[i, tw.RF_FIRST]
+            run.first_issue_time = float(first) if first == first else None
 
 
 __all__ = [

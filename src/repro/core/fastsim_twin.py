@@ -31,6 +31,8 @@ layout* matches the reference event list element for element.
     exit 4  trace buffer headroom low  } re-enters; margins below
     exit 5  decision buffer headroom   } guarantee forward
     exit 6  prediction buffer headroom } progress
+    exit 7  staged-arrival variate pool exhausted (driver restages a
+            fresh window and re-enters with RESUME)
 """
 
 import math
@@ -80,7 +82,9 @@ CI_HEAP_CAP = 13
 CI_TRACE_CAP = 14
 CI_DEC_CAP = 15
 CI_PRED_CAP = 16
-CI_LEN = 17
+CI_SRC_MODE = 17     # 0 = python-mediated source, else SRCMODE_*
+CI_SRC_RESERVE = 18  # max arrivals a single completion may inject
+CI_LEN = 19
 
 # CF: float configuration.
 CF_ALPHA = 0         # EWMAPredictor.alpha
@@ -104,7 +108,10 @@ RI_PKNOWN = 11       # predictor.has_kernel
 RI_NOISE_OFF = 12    # offset into the noise pool
 RI_BT_OFF = 13       # offset into the base_t_table pool
 RI_EXPECTED = 14     # ceil(num_blocks / n_sm), precomputed at build
-RI_LEN = 15
+RI_SRC = 15          # emitted by the lowered arrival source (live set)
+RI_STAGED = 16       # staged arrival row, not yet injected
+RI_TENANT = 17       # think-time tenant id (-1 = none)
+RI_LEN = 18
 
 # RF: per-run float state [nruns, RF_LEN].
 RF_MEANT = 0         # spec.mean_t
@@ -185,6 +192,22 @@ DEC_HOLD_MPMAX = 6       # "all kernels at their MPMax reservation caps"
 DEC_HOLD_ADAPTIVE = 7    # "all kernels at their adaptive sharing caps"
 DEC_PREEMPT = 8          # PreemptAtBoundary(key)
 
+# Lowered arrival-source modes (CI_SRC_MODE).
+SRCMODE_MGK = 1          # MGkClosed, admission="defer"
+SRCMODE_THINK = 2        # ThinkTime
+
+# SRCI: arrival-source integer state (flat); SRCF holds one pre-drawn
+# variate per staged row (mgk: offered absolute time; think: delay).
+SRC_NEXT = 0         # staged variates consumed so far this staging
+SRC_NSTAGED = 1      # staged window size
+SRC_BASE = 2         # row index of the first staged run
+SRC_MORE = 3         # variates exist beyond the staged window
+SRC_INSYS = 4        # mgk: kernels currently in the closed system
+SRC_POP = 5          # mgk: population bound
+SRC_NROUNDS = 6      # think: rounds per tenant
+SRC_PEND = 7         # think: tenant awaiting a variate (-1 = none)
+SRC_RD0 = 8          # think: per-tenant rounds-done counters tail
+
 # Policy ids.
 POL_FIFO = 0
 POL_FIFO_CAP = 1
@@ -210,7 +233,8 @@ S_PSI, S_PSF, S_BS, S_SL, S_SMI, S_SMF = 6, 7, 8, 9, 10, 11
 S_HI, S_HF, S_TRI, S_TRF, S_DCI, S_DCF = 12, 13, 14, 15, 16, 17
 S_PRI, S_PRF, S_ACT, S_Q, S_RWI, S_RWF = 18, 19, 20, 21, 22, 23
 S_NEWC, S_CAND, S_CREM, S_NP, S_BT = 24, 25, 26, 27, 28
-S_LEN = 29
+S_SRCI, S_SRCF = 29, 30
+S_LEN = 31
 
 
 def _identity(fn):
@@ -1282,9 +1306,125 @@ def _fan_out(S, now):
 
 
 @_jit
+def _src_inject(S, r2, t, now):
+    """Inject one staged arrival: the in-engine twin of
+    Simulator.inject_arrival (clip to now, push EV_ARRIVAL, invalidate)."""
+    si = S[0]
+    ri = S[4]
+    rf = S[5]
+    hi = S[12]
+    hf = S[13]
+    if t < now:
+        t = now
+    ri[r2, RI_STAGED] = 0
+    rf[r2, RF_ARRT] = t
+    si[SI_PENDING] += 1
+    seq = si[SI_SEQ]
+    si[SI_SEQ] = seq + 1
+    _heap_push(si, hi, hf, t, EV_ARRIVAL, seq, r2, 0, 0, 0.0)
+    si[SI_ACTIVE_DIRTY] = 1
+
+
+@_jit
+def _src_release_mgk(S, now):
+    """Release staged offered arrivals while the population has room.
+
+    Returns 7 when the staged window is exhausted but more offered
+    arrivals exist (the driver restages and resumes), else 0."""
+    srci = S[29]
+    srcf = S[30]
+    while srci[SRC_INSYS] < srci[SRC_POP]:
+        k = srci[SRC_NEXT]
+        if k >= srci[SRC_NSTAGED]:
+            if srci[SRC_MORE] != 0:
+                return 7
+            return 0
+        srci[SRC_NEXT] = k + 1
+        srci[SRC_INSYS] += 1
+        _src_inject(S, srci[SRC_BASE] + k, srcf[k], now)
+    return 0
+
+
+@_jit
+def _src_feed_think(S, r, now):
+    """Resubmit for the completed kernel's tenant (think-time twin).
+
+    Returns 7 when a variate is needed but the staged pool is empty
+    (the tenant is parked in SRC_PEND for the resume), else 0."""
+    ri = S[4]
+    srci = S[29]
+    srcf = S[30]
+    ten = ri[r, RI_TENANT]
+    if ten < 0:
+        return 0
+    if srci[SRC_RD0 + ten] >= srci[SRC_NROUNDS]:
+        return 0
+    k = srci[SRC_NEXT]
+    if k >= srci[SRC_NSTAGED]:
+        srci[SRC_PEND] = ten
+        return 7
+    srci[SRC_NEXT] = k + 1
+    srci[SRC_RD0 + ten] += 1
+    r2 = srci[SRC_BASE] + k
+    ri[r2, RI_TENANT] = ten
+    _src_inject(S, r2, now + srcf[k], now)
+    return 0
+
+
+@_jit
+def _src_on_completion(S, r, now):
+    """In-engine ``_feed_completion`` for lowered arrival sources.
+
+    Returns 0 (handled natively), 7 (variate pool exhausted) or 2 (the
+    source is not lowered: python must mediate)."""
+    ci = S[2]
+    ri = S[4]
+    srci = S[29]
+    mode = ci[CI_SRC_MODE]
+    if mode == SRCMODE_MGK:
+        if ri[r, RI_SRC] == 0:
+            return 0
+        srci[SRC_INSYS] -= 1
+        return _src_release_mgk(S, now)
+    if mode == SRCMODE_THINK:
+        return _src_feed_think(S, r, now)
+    return 2
+
+
+@_jit
+def _src_resume(S, now):
+    """Finish the injection interrupted by a pool-exhaustion exit.
+
+    Runs on RESUME entry after the driver restaged a fresh window;
+    returns 7 if the fresh pool is somehow still exhausted, else 0."""
+    ci = S[2]
+    ri = S[4]
+    srci = S[29]
+    srcf = S[30]
+    mode = ci[CI_SRC_MODE]
+    if mode == SRCMODE_MGK:
+        return _src_release_mgk(S, now)
+    if mode == SRCMODE_THINK:
+        ten = srci[SRC_PEND]
+        if ten < 0:
+            return 0
+        k = srci[SRC_NEXT]
+        if k >= srci[SRC_NSTAGED]:
+            return 7
+        srci[SRC_PEND] = -1
+        srci[SRC_NEXT] = k + 1
+        srci[SRC_RD0 + ten] += 1
+        r2 = srci[SRC_BASE] + k
+        ri[r2, RI_TENANT] = ten
+        _src_inject(S, r2, now + srcf[k], now)
+    return 0
+
+
+@_jit
 def _handle_block_end(S, r, sm, slot, start, now):
-    """Returns 2 when a kernel completed with an arrival source attached
-    (the driver must feed the source), else -1."""
+    """Returns 2 or 7 when a kernel completion must hand control back to
+    the driver (feed a python-mediated source / restage the variate
+    pool), else -1."""
     si = S[0]
     sd = S[1]
     ci = S[2]
@@ -1333,11 +1473,15 @@ def _handle_block_end(S, r, sm, slot, start, now):
         _pol_on_kernel_end(S, r, now)
         _sync_residency_caps(S)
         if ci[CI_HAS_SOURCE] != 0:
-            # _feed_completion may inject arrivals: hand control back to
-            # the driver, which feeds the source and re-enters with
-            # RESUME set (the engine then runs the pending _fan_out).
+            # _feed_completion may inject arrivals: lowered sources are
+            # fed in-engine (0 = done, 7 = pool exhausted); otherwise
+            # hand control back to the driver, which feeds the source
+            # and re-enters with RESUME set (the engine then runs the
+            # pending _fan_out).
             si[SI_EXIT_RUN] = r
-            return 2
+            rc = _src_on_completion(S, r, now)
+            if rc != 0:
+                return rc
         _fan_out(S, now)
     else:
         _try_issue(S, sm, now)
@@ -1372,13 +1516,16 @@ def advance(S):
     nsm = ci[CI_NSM]
     if si[SI_RESUME] != 0:
         si[SI_RESUME] = 0
+        rc = _src_resume(S, sd[SD_NOW])
+        if rc != 0:
+            return rc
         _fan_out(S, sd[SD_NOW])
     while True:
         # Headroom checks BEFORE the pop: one event dispatch can fan out
         # over every SM (<= 8 grants + 1 gate retry each) and record one
         # prediction, so these margins guarantee the buffers never
         # overflow mid-dispatch.
-        if si[SI_HEAP_LEN] + 9 * nsm + 8 > ci[CI_HEAP_CAP]:
+        if si[SI_HEAP_LEN] + 9 * nsm + 8 + ci[CI_SRC_RESERVE] > ci[CI_HEAP_CAP]:
             return 3
         if (ci[CI_REC_TRACE] != 0
                 and si[SI_TRACE_N] + 8 * nsm + 8 > ci[CI_TRACE_CAP]):
@@ -1411,8 +1558,8 @@ def advance(S):
         sd[SD_NOW] = t
         if kind == EV_BLOCK_END:
             rc = _handle_block_end(S, a, b, c, start, t)
-            if rc == 2:
-                return 2
+            if rc >= 0:
+                return rc
         elif kind == EV_ARRIVAL:
             _handle_arrival(S, a, t)
         else:

@@ -62,6 +62,7 @@ Built-in closed-loop scenarios:
 
 from __future__ import annotations
 
+import copy
 import functools
 import itertools
 import json
@@ -805,6 +806,37 @@ class _MGkProcess(ArrivalProcess):
             out.append(self._release(at=now))
         return out
 
+    # In-engine lowering (consumed by FastSimulator).  The offered stream
+    # is pre-drawn, so "defer" admission is a pure function of completion
+    # order: the j-th in-engine release is offered arrival _next + j.
+    # "drop" admission depends on wall-clock `now` vs the offered times in
+    # a way the engine doesn't model (dropped counting) — not lowered.
+    def engine_stage(self, limit: int) -> Optional[dict]:
+        if self._admission != "defer":
+            return None
+        end = min(len(self._offered), self._next + limit)
+        specs = []
+        times = []
+        uids = []
+        for j in range(self._next, end):
+            spec, time = self._offered[j]
+            specs.append(spec)
+            times.append(time)
+            uids.append(f"{spec.name}#{j}")
+        return {
+            "mode": "mgk", "specs": specs, "times": times, "uids": uids,
+            "more": end < len(self._offered),
+            "in_system": self._in_system,
+            "population": self._population,
+            "live": frozenset(self._live),
+        }
+
+    def engine_commit(self, consumed: int, in_system: int,
+                      live: Sequence[str]) -> None:
+        self._next += consumed
+        self._in_system = in_system
+        self._live = set(live)
+
 
 @register_scenario("mgk-closed")
 class MGkClosed(ClosedLoopScenario):
@@ -906,6 +938,46 @@ class _ThinkTimeProcess(ArrivalProcess):
             return []
         think = float(self._rng.exponential(self._mean_think))
         return [self._submit(tenant, now + think)]
+
+    # In-engine lowering (consumed by FastSimulator).  Each resubmission
+    # consumes one (think draw, spec pick) pair from the shared RNG in
+    # completion order regardless of WHICH tenant completed, so the k-th
+    # future pair is pre-drawable on a copy of the RNG; only its tenant
+    # binding is decided in-engine.  `engine_commit` replays the consumed
+    # draws on the real RNG so python and engine streams stay aligned.
+    def engine_stage(self, limit: int) -> Optional[dict]:
+        total = 0
+        for done in self._rounds_done:
+            if done < self._n_rounds:
+                total += self._n_rounds - done
+        n = min(total, limit)
+        rng = copy.deepcopy(self._rng)
+        specs = []
+        delays = []
+        uids = []
+        for k in range(n):
+            # Draw order matches on_completion -> _submit exactly.
+            think = float(rng.exponential(self._mean_think))
+            spec = self._pick(rng)
+            specs.append(spec)
+            delays.append(think)
+            uids.append(f"{spec.name}#{self._seq + k}")
+        return {
+            "mode": "think", "specs": specs, "delays": delays,
+            "uids": uids, "more": total > n,
+            "n_rounds": self._n_rounds,
+            "rounds_done": list(self._rounds_done),
+            "tenants": dict(self._tenant_of),
+        }
+
+    def engine_commit(self, consumed: int, rounds_done: Sequence[int],
+                      tenants: Dict[str, int]) -> None:
+        for _ in range(consumed):
+            self._rng.exponential(self._mean_think)
+            self._pick(self._rng)
+        self._seq += consumed
+        self._rounds_done = list(rounds_done)
+        self._tenant_of = dict(tenants)
 
 
 @register_scenario("think-time")

@@ -95,8 +95,11 @@ from .distrib import (
     cache_read as _cache_read,
     cache_write as _cache_write,
     canonical_digest as _canonical_digest,
+    chunk_size_for,
     clear_cache_memo,
     run_cell as _run_cell,
+    run_des_chunk,
+    _run_chunk,
     scavenge_cache_dir,
 )
 from .executor import solo_runtime_executor
@@ -858,31 +861,52 @@ def _execute_pending(pending: List[dict], jobs: int,
     for payload in pending:
         by_machine.setdefault(payload["machine"], []).append(payload)
     for machine, batch in by_machine.items():
-        on_executor = machine == "executor"
-        if jobs > 1:
-            # Fork is fine for the pure-Python DES; executor cells run real
-            # JAX, and forking a process with an initialized JAX runtime
-            # can deadlock — spawn workers instead (they re-import and
-            # re-JIT, which the per-cell compile cost dominates anyway).
-            # Longest-cells-first dispatch (LPT): DES cell cost tracks the
-            # total block count, and launching the SHA1-sized cells first
-            # keeps them off the pool's tail.  Results are keyed by cell
-            # key, so dispatch order never affects the output.
-            def _cost(payload: dict) -> float:
-                arrivals = payload.get("arrivals")
-                if arrivals is None:
-                    return math.inf      # closed loop: unknown, go first
-                return float(sum(a.spec.num_blocks for a in arrivals))
+        # Longest-cells-first dispatch (LPT): DES cell cost tracks the
+        # total block count, and launching the SHA1-sized cells first
+        # keeps them off the pool's tail.  The sort is stable, so
+        # equal-cost policy siblings stay adjacent — the chunk runner's
+        # staging prototype depends on that adjacency.  Results are keyed
+        # by cell key, so dispatch order never affects the output.
+        def _cost(payload: dict) -> float:
+            arrivals = payload.get("arrivals")
+            if arrivals is None:
+                return math.inf      # closed loop: unknown, go first
+            return float(sum(a.spec.num_blocks for a in arrivals))
 
-            batch.sort(key=_cost, reverse=True)
-            ctx = multiprocessing.get_context("spawn") if on_executor else None
-            with ProcessPoolExecutor(max_workers=jobs,
-                                     mp_context=ctx) as pool:
-                results = list(pool.map(_run_cell, batch, chunksize=1))
+        if machine == "executor":
+            if jobs > 1:
+                # Executor cells run real JAX, and forking a process with
+                # an initialized JAX runtime can deadlock — spawn workers
+                # instead (they re-import and re-JIT, which the per-cell
+                # compile cost dominates anyway).
+                batch.sort(key=_cost, reverse=True)
+                ctx = multiprocessing.get_context("spawn")
+                with ProcessPoolExecutor(max_workers=jobs,
+                                         mp_context=ctx) as pool:
+                    results = list(pool.map(_run_cell, batch, chunksize=1))
+            else:
+                results = [_run_cell(p) for p in batch]
+            for payload, record in zip(batch, results):
+                records[payload["key"]] = record
+            continue
+
+        # DES: whole chunks run in-engine through run_des_chunk — one
+        # packfile write per chunk instead of one cache file per cell,
+        # and sibling cells share a staging prototype.  Pending cells are
+        # known cache misses (pass 2 resolved hits), so the runner skips
+        # the per-cell cache probe.  Fork is fine for the pure-Python DES.
+        batch.sort(key=_cost, reverse=True)
+        cache_dir = batch[0].get("cache_dir")
+        if jobs > 1:
+            size = chunk_size_for(len(batch), jobs)
+            chunks = [(batch[i:i + size], cache_dir)
+                      for i in range(0, len(batch), size)]
+            with ProcessPoolExecutor(max_workers=jobs) as pool:
+                for chunk_records in pool.map(_run_chunk, chunks):
+                    records.update(chunk_records)
         else:
-            results = [_run_cell(p) for p in batch]
-        for payload, record in zip(batch, results):
-            records[payload["key"]] = record
+            records.update(run_des_chunk(batch, cache_dir,
+                                         read_cache=False))
 
 
 #: The two cell-dispatch tiers a sweep can run under.

@@ -3,7 +3,11 @@
 Connects to a :class:`repro.core.distrib.QueueDispatcher`, handshakes
 (protocol version + code fingerprints + the run's queued-key manifest),
 then pulls chunks of DES cells and runs them through this process's
-long-lived compiled engine until the dispatcher says shutdown.  The
+long-lived compiled engine until the dispatcher says shutdown.  Each
+chunk runs as one `run_des_chunk` call — adjacent same-body policy
+siblings share a staging prototype and results take the lean terminal
+scatter (DESIGN.md Section 13) — so per-cell Python boundary cost is
+paid once per chunk, not once per cell.  The
 dispatcher spawns local workers itself; this entry point exists for
 *remote* fan-out — run it on any machine that shares the code tree::
 

@@ -364,8 +364,8 @@ def test_memo_counters_surface_in_sweep_stats(tmp_path):
 # --------------------------------------------------- chunking + validation
 def test_chunk_size_policy():
     assert chunk_size_for(0, 2) == 1
-    assert chunk_size_for(12, 2) == 2        # ceil(12 / (4*2))
-    assert chunk_size_for(10_000, 2) == 64   # clamped to the frame cap
+    assert chunk_size_for(12, 2) == 3        # ceil(12 / (2*2))
+    assert chunk_size_for(10_000, 2) == 384  # clamped to the frame cap
     assert chunk_size_for(100, 4, chunk_cells=7) == 7   # explicit pin
     assert chunk_size_for(100, 4, chunk_cells=0) == 1
 

@@ -164,8 +164,9 @@ def test_warm_rerun_serves_from_the_in_memory_memo(tmp_path):
     spec = spec_for(("fifo", "srtf"))
     cold = run_sweep(spec, cache_dir=tmp_path)
     assert cold.stats["computed"] == 2
-    # Delete every on-disk record: a pure-disk reader would now recompute.
-    for f in tmp_path.glob("*.json"):
+    # Delete every on-disk record (per-cell files and chunk packs): a
+    # pure-disk reader would now recompute.
+    for f in (*tmp_path.glob("*.json"), *tmp_path.glob("*.pack.jsonl")):
         f.unlink()
     warm = run_sweep(spec, cache_dir=tmp_path)
     assert warm.stats["computed"] == 0
@@ -176,7 +177,7 @@ def test_warm_rerun_serves_from_the_in_memory_memo(tmp_path):
     fresh = run_sweep(spec, cache_dir=other)
     assert fresh.stats["computed"] == 2
     # ...and clearing the memo forces real disk reads again.
-    for f in tmp_path.glob("*.json"):
+    for f in (*tmp_path.glob("*.json"), *tmp_path.glob("*.pack.jsonl")):
         f.unlink()
     clear_cache_memo()
     cold_again = run_sweep(spec, cache_dir=tmp_path)
